@@ -1,0 +1,37 @@
+"""Regenerate the roofline table inside EXPERIMENTS.md from the dry-run
+artifacts (idempotent; keyed on the <!-- ROOFLINE_TABLE --> marker)."""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import markdown_table, run
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main():
+    cells = run(write=True)
+    table = markdown_table(cells, pod=256)
+    n2 = sum(1 for c in cells if c["chips"] == 512)
+    blob = (f"{MARK}\n{table}\n\n*(single-pod mesh; {n2} matching multi-pod "
+            "cells in `experiments/roofline.json` — the pod axis adds the "
+            "once-per-step DP gradient reduction and halves per-chip batch)*")
+    text = open(EXP).read()
+    pattern = re.compile(re.escape(MARK) + r"(?:.*?\n\n\*\(single-pod[^\n]*\n?)?",
+                         re.S)
+    if MARK in text:
+        # replace from marker through the previous injected table (up to the
+        # next section header)
+        pre, rest = text.split(MARK, 1)
+        nxt = rest.find("\nObservations:")
+        text = pre + blob + rest[nxt:]
+    open(EXP, "w").write(text)
+    print(f"injected {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: train a small LM end-to-end on CPU with checkpoint/restart.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch smollm-135m]
+        [--steps 200] [--preset full|small]
+
+``--preset small`` (default) trains the reduced same-family config
+(~1M params, runs in a couple of minutes on CPU); ``--preset full`` uses the
+real architecture config (use on actual accelerators).  A failure is injected
+halfway to demonstrate restart-from-checkpoint.
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCH_IDS, get_config
+from repro.train.loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--preset", default="small", choices=["small", "full"])
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (demo of restart)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.preset == "small":
+        cfg = cfg.smoke()
+    fail_at = args.fail_at if args.fail_at is not None else args.steps // 2
+
+    with tempfile.TemporaryDirectory() as td:
+        tc = TrainConfig(steps=args.steps, batch_size=args.batch,
+                         seq_len=args.seq, peak_lr=1e-3, warmup=20,
+                         ckpt_every=max(10, args.steps // 8),
+                         ckpt_dir=os.path.join(td, "ckpts"),
+                         fail_at_step=fail_at, log_every=10)
+        res = train(cfg, tc)
+        print(f"\narch={cfg.name} steps={res.final_step} "
+              f"restarts={res.restarts} wall={res.wall_s:.1f}s")
+        print(f"loss: {res.losses[0]:.4f} -> {res.losses[-1]:.4f} "
+              f"({'improved' if res.losses[-1] < res.losses[0] else 'flat'})")
+
+
+if __name__ == "__main__":
+    main()

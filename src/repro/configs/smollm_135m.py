@@ -1,0 +1,13 @@
+"""smollm-135m — llama-arch small dense LM [hf:HuggingFaceTB/SmolLM-135M; hf].
+
+30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m", family="dense",
+    n_layers=30, d_model=576, n_heads=9, n_kv_heads=3,
+    d_ff=1536, vocab_size=49152,
+    rope_theta=10000.0, tie_embeddings=True,
+    max_seq_len=32768,
+)

@@ -1,0 +1,147 @@
+"""Site/route model: bandwidths, dataset catalogs, and relay planning.
+
+The paper's key performance insight (C2 in DESIGN.md): the source file system
+is the bottleneck (LLNL could source at only ~1.5 GB/s), so read it ONCE per
+dataset and relay replica→replica over the faster inter-LCF path (up to
+7.5 GB/s), with the two hops overlapping.  ``RouteGraph`` captures per-site
+read/write caps and per-route bandwidths (paper Table 3) so both the simulator
+and the scheduler can reason about them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+GB = 1024 ** 3
+TB = 1024 ** 4
+PB = 1024 ** 5
+DAY = 86400.0
+
+
+@dataclass
+class Dataset:
+    """One ESGF path (a directory tree)."""
+    path: str
+    bytes: int
+    files: int
+    directories: int
+    unreadable: bool = False  # persistent permission fault (paper §4 phase 4)
+
+
+@dataclass
+class Site:
+    name: str
+    read_bw: float            # aggregate source rate cap (bytes/s)
+    write_bw: float           # aggregate sink rate cap (bytes/s)
+    scan_files_per_s: float = 50_000.0   # metadata scan throughput
+    scan_mem_limit_files: int = 5_000_000  # OOM threshold for one scan (paper §5)
+
+
+@dataclass
+class Route:
+    source: str
+    destination: str
+    bandwidth: float          # per-route cap (bytes/s); min with site caps applies
+
+
+class RouteGraph:
+    def __init__(self, sites: Sequence[Site], routes: Sequence[Route]):
+        self.sites: Dict[str, Site] = {s.name: s for s in sites}
+        self.routes: Dict[Tuple[str, str], Route] = {
+            (r.source, r.destination): r for r in routes}
+
+    def route(self, src: str, dst: str) -> Optional[Route]:
+        return self.routes.get((src, dst))
+
+    def bandwidth(self, src: str, dst: str) -> float:
+        r = self.route(src, dst)
+        if r is None:
+            return 0.0
+        return min(r.bandwidth, self.sites[src].read_bw, self.sites[dst].write_bw)
+
+    def effective_rate(self, src: str, dst: str,
+                       active_by_route: Dict[Tuple[str, str], int]) -> float:
+        """Fair-share rate for ONE transfer on (src, dst) given concurrent
+        transfers: the route cap is shared among its actives, and each site's
+        read/write caps are shared among all transfers touching the site."""
+        n_route = max(1, active_by_route.get((src, dst), 1))
+        src_load = sum(n for (s, _), n in active_by_route.items() if s == src) or 1
+        dst_load = sum(n for (_, d), n in active_by_route.items() if d == dst) or 1
+        r = self.route(src, dst)
+        if r is None:
+            return 0.0
+        return min(r.bandwidth / n_route,
+                   self.sites[src].read_bw / src_load,
+                   self.sites[dst].write_bw / dst_load)
+
+
+# --------------------------------------------------------------- paper setup
+def paper_route_graph() -> RouteGraph:
+    """Three-site graph with paper Table 3 / §1 bandwidths.
+
+    LLNL file system sources ~1.5 GB/s aggregate; with 2 concurrent transfers
+    per route that is ~0.65 GB/s each (Table 3).  Inter-LCF single transfers
+    reached 2-3.5 GB/s, peak >7.5 GB/s aggregate.
+    """
+    sites = [
+        Site("LLNL", read_bw=1.5 * GB, write_bw=1.5 * GB,
+             scan_files_per_s=20_000, scan_mem_limit_files=2_000_000),
+        Site("ALCF", read_bw=10 * GB, write_bw=10 * GB),
+        Site("OLCF", read_bw=10 * GB, write_bw=10 * GB),
+    ]
+    routes = [
+        Route("LLNL", "ALCF", 2 * 0.648 * GB),
+        Route("LLNL", "OLCF", 2 * 0.662 * GB),
+        Route("ALCF", "OLCF", 2 * 1.706 * GB),
+        Route("OLCF", "ALCF", 2 * 2.352 * GB),
+    ]
+    return RouteGraph(sites, routes)
+
+
+def make_catalog(n_datasets: int = 2291, total_bytes: int = int(7.3 * PB),
+                 total_files: int = 28_907_532,
+                 total_dirs: int = 17_347_671,
+                 seed: int = 0) -> List[Dataset]:
+    """Synthesize an ESGF-like catalog: n_datasets directory trees whose sizes
+    follow a lognormal distribution, normalized to the paper's totals."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    w = rng.lognormal(mean=0.0, sigma=1.6, size=n_datasets)
+    w = w / w.sum()
+    sizes = (w * total_bytes).astype(np.int64)
+    files = np.maximum(1, (w * total_files)).astype(np.int64)
+    dirs = np.maximum(1, (w * total_dirs)).astype(np.int64)
+    names = [_esgf_path(i, rng) for i in range(n_datasets)]
+    return [Dataset(names[i], int(sizes[i]), int(files[i]), int(dirs[i]))
+            for i in range(n_datasets)]
+
+
+_INSTITUTIONS = ["MPI-M", "MOHC", "MIROC", "IPSL", "NCAR", "CSIRO", "NOAA-GFDL",
+                 "EC-Earth-Consortium", "CNRM-CERFACS", "BCC"]
+_EXPERIMENTS = ["historical", "amip", "piControl", "abrupt-4xCO2", "ssp585",
+                "ssp245", "esm-hist", "1pctCO2"]
+
+
+def _esgf_path(i: int, rng) -> str:
+    inst = _INSTITUTIONS[i % len(_INSTITUTIONS)]
+    exp = _EXPERIMENTS[(i // len(_INSTITUTIONS)) % len(_EXPERIMENTS)]
+    phase = "CMIP6" if (i % 10) < 9 else "CMIP5"   # ~90% CMIP6 by count
+    return f"/css03_data/{phase}/CMIP/{inst}/model-{i % 97}/{exp}/r{i}i1p1f1"
+
+
+def split_oversized(ds: Dataset, scan_limit_files: int) -> List[Dataset]:
+    """Paper §5: scanning an extremely large directory OOM'd a LLNL node; the
+    fix was to split into multiple smaller subdirectory transfers."""
+    if ds.files <= scan_limit_files:
+        return [ds]
+    n = math.ceil(ds.files / scan_limit_files)
+    out = []
+    for j in range(n):
+        out.append(Dataset(
+            path=f"{ds.path}/part-{j:03d}",
+            bytes=ds.bytes // n, files=ds.files // n,
+            directories=max(1, ds.directories // n),
+            unreadable=ds.unreadable))
+    return out

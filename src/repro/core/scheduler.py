@@ -1,0 +1,169 @@
+"""The replication scheduler — a faithful implementation of paper Figure 4,
+generalized to N replica sites.
+
+Figure 4 logic (2291 ESGF paths × 2 destinations):
+  1.  populate table with (dataset, LLNL→ALCF) and (dataset, LLNL→OLCF), NULL.
+  2a. start source→primary transfers while < 2 active on the route.
+  2b. poll actives; mark SUCCEEDED/FAILED.
+  2c. if any transfer to primary is PAUSED, start source→secondary instead.
+  2d. start replica→replica relays for datasets present at one LCF only.
+  2e. symmetric relay in the other direction.
+  2f. terminate when no row is NULL/ACTIVE/FAILED/PAUSED.
+
+Key properties preserved from the paper:
+  * ≤ ``max_active_per_route`` concurrent transfers per route, so one
+    transfer's metadata scan overlaps another's data movement (C5);
+  * the slow source is read once per dataset whenever a relay is possible (C2);
+  * FAILED rows are retried with bounded retries, then QUARANTINED with a
+    notification (C3);
+  * re-routing rewrites the row's *source*, never loses the row (C4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.faults import Notifier, RetryPolicy
+from repro.core.routes import Dataset, RouteGraph
+from repro.core.transfer_table import (RETRYABLE, Status, TransferRecord,
+                                       TransferTable)
+from repro.core.transport import Transport
+
+
+@dataclass
+class ReplicationPolicy:
+    source: str                       # e.g. "LLNL"
+    replicas: Sequence[str]           # priority order, e.g. ("ALCF", "OLCF")
+    max_active_per_route: int = 2     # paper: two per route (scan/move overlap)
+
+
+OCCUPYING = (Status.ACTIVE, Status.QUEUED, Status.PAUSED)
+
+
+class ReplicationScheduler:
+    def __init__(self, table: TransferTable, transport: Transport,
+                 catalog: Dict[str, Dataset], policy: ReplicationPolicy,
+                 retry: RetryPolicy = RetryPolicy(),
+                 notifier: Optional[Notifier] = None):
+        self.table = table
+        self.transport = transport
+        self.catalog = catalog
+        self.policy = policy
+        self.retry = retry
+        self.notifier = notifier or Notifier()
+        self._backoff_until: Dict[Tuple[str, str], float] = {}
+
+    # ------------------------------------------------------------------ setup
+    def populate(self) -> int:
+        return self.table.populate(
+            sorted(self.catalog), self.policy.source, list(self.policy.replicas))
+
+    # ------------------------------------------------------------------- step
+    def step(self, now: float) -> List[str]:
+        """One pass of the Figure-4 loop.  Returns human-readable actions."""
+        actions: List[str] = []
+        self._poll(now, actions)                                  # 2b
+        pol = self.policy
+        primary = pol.replicas[0]
+        self._start_route(pol.source, primary, now, actions)      # 2a
+        if self._any_paused(primary):                             # 2c
+            for sec in pol.replicas[1:]:
+                self._start_route(pol.source, sec, now, actions)
+        self._start_relays(now, actions)                          # 2d / 2e
+        return actions
+
+    def done(self) -> bool:                                       # 2f
+        return self.table.done()
+
+    # ----------------------------------------------------------------- 2b poll
+    def _poll(self, now: float, actions: List[str]) -> None:
+        for rec in self.table.by_status(Status.ACTIVE, Status.QUEUED, Status.PAUSED):
+            st = self.transport.poll(rec.uuid)
+            upd = dict(bytes_transferred=st.bytes_done, files=st.files_done,
+                       directories=st.dirs_done, faults=st.faults, rate=st.rate)
+            if st.status == Status.SUCCEEDED:
+                upd.update(status=Status.SUCCEEDED, completed=now)
+                actions.append(f"SUCCEEDED {rec.source}->{rec.destination} {rec.dataset}")
+            elif st.status == Status.FAILED:
+                retries = rec.retries + 1
+                if retries > self.retry.max_retries:
+                    upd.update(status=Status.QUARANTINED, retries=retries)
+                    self.notifier.notify(
+                        f"transfer {rec.dataset} -> {rec.destination} exceeded "
+                        f"{self.retry.max_retries} retries ({st.detail})",
+                        rec.dataset)
+                    actions.append(f"QUARANTINED {rec.dataset} -> {rec.destination}")
+                else:
+                    upd.update(status=Status.FAILED, retries=retries)
+                    self._backoff_until[(rec.dataset, rec.destination)] = (
+                        now + self.retry.backoff_s)
+                    actions.append(f"FAILED (retry {retries}) {rec.dataset} "
+                                   f"-> {rec.destination}: {st.detail}")
+            else:
+                upd.update(status=st.status)
+            self.table.update(rec.dataset, rec.destination, **upd)
+
+    # ------------------------------------------------------------ route starts
+    def _slots(self, src: str, dst: str) -> int:
+        used = self.table.count_route(src, dst, *OCCUPYING)
+        return max(0, self.policy.max_active_per_route - used)
+
+    def _eligible(self, dst: str, now: float,
+                  require_source: Optional[str] = None) -> List[TransferRecord]:
+        rows = self.table.by_status(*RETRYABLE, destination=dst)
+        # paper §5: quarantined transfers are re-admitted once the human has
+        # fixed the underlying problem (permissions, fs config)
+        for r in self.table.by_status(Status.QUARANTINED, destination=dst):
+            if self.notifier.is_fixed(r.dataset):
+                self.table.update(r.dataset, r.destination,
+                                  status=Status.FAILED, retries=0)
+                r.status = Status.FAILED
+                r.retries = 0
+                rows.append(r)
+        out = []
+        for r in rows:
+            if require_source is not None and r.source != require_source:
+                continue
+            if self._backoff_until.get((r.dataset, r.destination), 0.0) > now:
+                continue
+            out.append(r)
+        return out
+
+    def _start(self, rec: TransferRecord, src: str, now: float,
+               actions: List[str]) -> None:
+        ds = self.catalog[rec.dataset]
+        uid = self.transport.submit(ds, src, rec.destination)
+        self.table.update(rec.dataset, rec.destination, source=src, uuid=uid,
+                          requested=now, status=Status.ACTIVE)
+        actions.append(f"START {src}->{rec.destination} {rec.dataset}")
+
+    def _start_route(self, src: str, dst: str, now: float,
+                     actions: List[str]) -> None:
+        slots = self._slots(src, dst)
+        if slots <= 0:
+            return
+        for rec in self._eligible(dst, now, require_source=src)[:slots]:
+            self._start(rec, src, now, actions)
+
+    # -------------------------------------------------------------- 2d/2e relay
+    def _start_relays(self, now: float, actions: List[str]) -> None:
+        pol = self.policy
+        have: Dict[str, set] = {r: set(self.table.succeeded_datasets(r))
+                                for r in pol.replicas}
+        for dst in pol.replicas:
+            # datasets succeeded at some other replica but still outstanding here
+            needed = self._eligible(dst, now)
+            for rec in needed:
+                donors = [r for r in pol.replicas
+                          if r != dst and rec.dataset in have[r]]
+                if not donors:
+                    continue
+                donor = donors[0]
+                if self._slots(donor, dst) <= 0:
+                    continue
+                self._start(rec, donor, now, actions)
+
+    # ---------------------------------------------------------------- helpers
+    def _any_paused(self, dst: str) -> bool:
+        return len(self.table.by_status(Status.PAUSED, destination=dst)) > 0

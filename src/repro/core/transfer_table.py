@@ -1,0 +1,199 @@
+"""The transfer table — paper Table 1, backed by a real database (sqlite3).
+
+One row per (dataset, source→destination) transfer.  The scheduler
+(`core.scheduler`) is a pure state machine over this table, exactly as the
+paper's replication tool tracked its 2×2291 transfers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import sqlite3
+import threading
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+
+class Status(str, enum.Enum):
+    NULL = "NULL"            # not yet requested
+    QUEUED = "QUEUED"        # submitted, not yet started by transport
+    ACTIVE = "ACTIVE"
+    PAUSED = "PAUSED"        # collection manager paused the endpoint
+    SUCCEEDED = "SUCCEEDED"
+    FAILED = "FAILED"        # transient — eligible for retry
+    QUARANTINED = "QUARANTINED"  # persistent failure, human notified (paper §5)
+
+
+TERMINAL = (Status.SUCCEEDED, Status.QUARANTINED)
+RETRYABLE = (Status.NULL, Status.FAILED)
+
+
+@dataclass
+class TransferRecord:
+    """Schema of paper Table 1 (+ retry bookkeeping)."""
+    dataset: str                      # directory path to be transferred
+    source: str                       # e.g. LLNL / ALCF / OLCF
+    destination: str
+    uuid: Optional[str] = None        # transport transfer identifier
+    requested: Optional[float] = None
+    completed: Optional[float] = None
+    status: Status = Status.NULL
+    directories: int = 0
+    files: int = 0
+    rate: float = 0.0                 # bytes/s
+    faults: int = 0
+    bytes_transferred: int = 0
+    retries: int = 0
+
+    @property
+    def route(self) -> Tuple[str, str]:
+        return (self.source, self.destination)
+
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS transfer (
+  dataset TEXT NOT NULL,
+  source TEXT NOT NULL,
+  destination TEXT NOT NULL,
+  uuid TEXT,
+  requested REAL,
+  completed REAL,
+  status TEXT NOT NULL DEFAULT 'NULL',
+  directories INTEGER NOT NULL DEFAULT 0,
+  files INTEGER NOT NULL DEFAULT 0,
+  rate REAL NOT NULL DEFAULT 0,
+  faults INTEGER NOT NULL DEFAULT 0,
+  bytes_transferred INTEGER NOT NULL DEFAULT 0,
+  retries INTEGER NOT NULL DEFAULT 0,
+  PRIMARY KEY (dataset, destination)
+);
+CREATE INDEX IF NOT EXISTS idx_status ON transfer (status);
+CREATE INDEX IF NOT EXISTS idx_route ON transfer (source, destination, status);
+"""
+
+_FIELDS = [f.name for f in dataclasses.fields(TransferRecord)]
+
+
+class TransferTable:
+    """sqlite3-backed transfer table.
+
+    Note the primary key is (dataset, destination): the *source* of a row may
+    be rewritten by the scheduler when it re-routes (e.g. LLNL→OLCF relay
+    becomes ALCF→OLCF once the dataset lands at ALCF) — exactly the
+    flexibility the paper calls out as important.
+    """
+
+    def __init__(self, path: str = ":memory:"):
+        self._conn = sqlite3.connect(path, check_same_thread=False)
+        self._lock = threading.Lock()
+        with self._lock:
+            self._conn.executescript(_SCHEMA)
+            self._conn.commit()
+
+    # ------------------------------------------------------------------ CRUD
+    def populate(self, datasets: Iterable[str], source: str,
+                 destinations: Sequence[str]) -> int:
+        """Step 1 of Figure 4: two rows per path, status NULL."""
+        n = 0
+        with self._lock:
+            for ds in datasets:
+                for dst in destinations:
+                    self._conn.execute(
+                        "INSERT OR IGNORE INTO transfer "
+                        "(dataset, source, destination, status) VALUES (?,?,?,?)",
+                        (ds, source, dst, Status.NULL.value))
+                    n += 1
+            self._conn.commit()
+        return n
+
+    def upsert(self, rec: TransferRecord) -> None:
+        with self._lock:
+            self._conn.execute(
+                "INSERT OR REPLACE INTO transfer "
+                f"({','.join(_FIELDS)}) VALUES ({','.join('?' * len(_FIELDS))})",
+                self._row(rec))
+            self._conn.commit()
+
+    def update(self, dataset: str, destination: str, **kw) -> None:
+        if "status" in kw and isinstance(kw["status"], Status):
+            kw["status"] = kw["status"].value
+        cols = ", ".join(f"{k}=?" for k in kw)
+        with self._lock:
+            self._conn.execute(
+                f"UPDATE transfer SET {cols} WHERE dataset=? AND destination=?",
+                (*kw.values(), dataset, destination))
+            self._conn.commit()
+
+    # ---------------------------------------------------------------- queries
+    def get(self, dataset: str, destination: str) -> Optional[TransferRecord]:
+        rows = self._select(
+            "WHERE dataset=? AND destination=?", (dataset, destination))
+        return rows[0] if rows else None
+
+    def by_status(self, *statuses: Status, destination: Optional[str] = None,
+                  source: Optional[str] = None, limit: int = 0
+                  ) -> List[TransferRecord]:
+        q = "WHERE status IN (%s)" % ",".join("?" * len(statuses))
+        args: list = [s.value for s in statuses]
+        if destination is not None:
+            q += " AND destination=?"
+            args.append(destination)
+        if source is not None:
+            q += " AND source=?"
+            args.append(source)
+        q += " ORDER BY dataset"
+        if limit:
+            q += f" LIMIT {int(limit)}"
+        return self._select(q, tuple(args))
+
+    def count_route(self, source: str, destination: str, *statuses: Status) -> int:
+        with self._lock:
+            cur = self._conn.execute(
+                "SELECT COUNT(*) FROM transfer WHERE source=? AND destination=? "
+                "AND status IN (%s)" % ",".join("?" * len(statuses)),
+                (source, destination, *[s.value for s in statuses]))
+            return cur.fetchone()[0]
+
+    def count_status(self, *statuses: Status) -> int:
+        with self._lock:
+            cur = self._conn.execute(
+                "SELECT COUNT(*) FROM transfer WHERE status IN (%s)"
+                % ",".join("?" * len(statuses)),
+                tuple(s.value for s in statuses))
+            return cur.fetchone()[0]
+
+    def succeeded_datasets(self, destination: str) -> List[str]:
+        with self._lock:
+            cur = self._conn.execute(
+                "SELECT dataset FROM transfer WHERE destination=? AND status=?",
+                (destination, Status.SUCCEEDED.value))
+            return [r[0] for r in cur.fetchall()]
+
+    def all(self) -> List[TransferRecord]:
+        return self._select("", ())
+
+    def done(self) -> bool:
+        """Figure 4 step 2f: terminate when nothing is outstanding."""
+        return self.count_status(Status.NULL, Status.QUEUED, Status.ACTIVE,
+                                 Status.PAUSED, Status.FAILED) == 0
+
+    # ---------------------------------------------------------------- helpers
+    def _select(self, where: str, args: tuple) -> List[TransferRecord]:
+        with self._lock:
+            cur = self._conn.execute(
+                f"SELECT {','.join(_FIELDS)} FROM transfer {where}", args)
+            rows = cur.fetchall()
+        out = []
+        for r in rows:
+            d = dict(zip(_FIELDS, r))
+            d["status"] = Status(d["status"])
+            out.append(TransferRecord(**d))
+        return out
+
+    @staticmethod
+    def _row(rec: TransferRecord) -> tuple:
+        vals = []
+        for f in _FIELDS:
+            v = getattr(rec, f)
+            vals.append(v.value if isinstance(v, Status) else v)
+        return tuple(vals)

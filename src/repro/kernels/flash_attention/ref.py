@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for blocked causal attention (optionally sliding-window)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q, k, v: (B, H, T, d) — causal softmax attention in f32."""
+    B, H, T, d = q.shape
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = j <= i
+    if window is not None:
+        mask &= (i - j) < window
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the selective scan (Mamba1 S6 recurrence).
+
+    h[t] = exp(dt[t] * A) * h[t-1] + (dt[t] * u[t]) * B[t]
+    y[t] = <h[t], C[t]> + D * u[t]        (D applied by the caller)
+
+Shapes: u, dt (B, T, D); Bm, Cm (B, T, N); A (D, N); h0 (B, D, N), all f32.
+Sequential reference — the unambiguous semantics the kernel must match.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u: jnp.ndarray, dt: jnp.ndarray, Bm: jnp.ndarray,
+                       Cm: jnp.ndarray, A: jnp.ndarray, h0: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs                     # (B,D), (B,D), (B,N), (B,N)
+        a = jnp.exp(dt_t[..., None] * A)             # (B, D, N)
+        h = a * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (u.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), hT

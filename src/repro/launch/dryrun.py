@@ -1,0 +1,544 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape) on the
+production meshes and extract roofline inputs from the compiled artifact.
+
+For each cell this produces a JSON record with:
+  * ``memory``      — per-device argument/output/temp bytes (fits-on-chip proof)
+  * ``cost``        — per-device HLO FLOPs and bytes accessed
+  * ``collectives`` — per-type op counts and per-device wire bytes parsed from
+                      the post-SPMD optimized HLO
+  * timings for lower/compile.
+
+Run one cell:   python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+Run everything: python -m repro.launch.dryrun --all   (subprocess per cell)
+Results land in experiments/dryrun/*.json (read by benchmarks/roofline.py).
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch import shardings as SH
+from repro.models.axes import logical_axis_rules
+from repro.models.config import ModelConfig, param_count
+from repro.models.model import LM
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# --------------------------------------------------------------- input specs
+def sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def train_inputs(cfg: ModelConfig, B: int, T: int, mesh: Mesh, bax):
+    batch: Dict[str, Any] = {}
+    if cfg.n_codebooks > 1:
+        batch["tokens"] = sds((B, T, cfg.n_codebooks), jnp.int32, mesh, P(bax))
+        batch["labels"] = sds((B, T, cfg.n_codebooks), jnp.int32, mesh, P(bax))
+    elif not cfg.embed_inputs:
+        batch["embeds"] = sds((B, T, cfg.d_model), jnp.bfloat16, mesh, P(bax))
+        batch["labels"] = sds((B, T), jnp.int32, mesh, P(bax))
+    else:
+        batch["tokens"] = sds((B, T), jnp.int32, mesh, P(bax))
+        batch["labels"] = sds((B, T), jnp.int32, mesh, P(bax))
+    if cfg.mrope:
+        batch["positions3"] = sds((3, B, T), jnp.int32, mesh, P(None, bax))
+    return batch
+
+
+def abstract_params(model: LM, mesh: Mesh):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = SH.param_specs(shapes, model.cfg, mesh)
+    tree = jax.tree_util.tree_map(
+        lambda s, sp: sds(s.shape, s.dtype, mesh, sp), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return tree, specs, shapes
+
+
+def abstract_opt_state(params_shapes, param_specs, mesh: Mesh):
+    opt_shapes = jax.eval_shape(adamw.init, params_shapes)
+    mom_specs = SH.opt_state_specs(param_specs, None, mesh, params_shapes)
+    def mk(tree):
+        return jax.tree_util.tree_map(
+            lambda s, sp: sds(s.shape, s.dtype, mesh, sp), tree, mom_specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return adamw.AdamWState(
+        step=sds((), jnp.int32, mesh, P()),
+        master=mk(opt_shapes.master), m=mk(opt_shapes.m), v=mk(opt_shapes.v))
+
+
+def abstract_cache(model: LM, B: int, S: int, mesh: Mesh, bax):
+    shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    specs = SH.cache_specs(shapes, B, S, mesh, bax)
+    tree = jax.tree_util.tree_map(
+        lambda s, sp: sds(s.shape, s.dtype, mesh, sp), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return tree
+
+
+# ------------------------------------------------------------- step builders
+def build_train_step(model: LM, microbatches: int = 1, mesh: Optional[Mesh] = None,
+                     pspecs=None, hoist_fsdp: bool = False):
+    """Gradient-accumulation train step: fwd+bwd per microbatch inside a scan
+    (bounds live activations), one optimizer update per step.
+
+    hoist_fsdp: gather FSDP-sharded weights ONCE per step (outside the
+    microbatch loop) and reduce-scatter gradients back to the sharded layout
+    per microbatch.  Without this, XLA re-gathers every weight in every
+    microbatch's forward, remat-forward, and backward — measured 13.2 TB/chip
+    of all-gather for gemma3-27b train_4k (§Perf cell A iteration 2)."""
+    grad_fn = jax.value_and_grad(
+        lambda p, b: model.loss_fn(p, b)[0])
+
+    def _drop_data(spec: P) -> P:
+        out = []
+        for ax in tuple(spec):
+            if ax == "data":
+                out.append(None)
+            elif isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a != "data")
+                out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+            else:
+                out.append(ax)
+        return P(*out)
+
+    def train_step(params, opt_state, batch):
+        use_params = params
+        if hoist_fsdp and mesh is not None and pspecs is not None:
+            use_params = jax.tree_util.tree_map(
+                lambda x, sp: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, _drop_data(sp))),
+                params, pspecs, is_leaf=lambda s: isinstance(s, P))
+
+        def reshard_grads(g):
+            if not (hoist_fsdp and mesh is not None and pspecs is not None):
+                return g
+            return jax.tree_util.tree_map(
+                lambda x, sp: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, sp)),
+                g, pspecs, is_leaf=lambda s: isinstance(s, P))
+
+        if microbatches == 1:
+            loss, grads = grad_fn(use_params, batch)
+            grads = reshard_grads(grads)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            def split3(x):   # positions3: (3, B, T)
+                return x.reshape((x.shape[0], microbatches,
+                                  x.shape[1] // microbatches)
+                                 + x.shape[2:]).swapaxes(0, 1)
+            parts = {k: (split3(v) if k == "positions3" else split(v))
+                     for k, v in batch.items()}
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                l, g = grad_fn(use_params, mb)
+                # bf16 gradient reduction (wire halves vs f32; accumulator
+                # stays f32 and sharded, so no precision loss across
+                # microbatches beyond the per-microbatch bf16 round)
+                g = jax.tree_util.tree_map(
+                    lambda x: x.astype(jnp.bfloat16), g)
+                g = reshard_grads(g)     # reduce-scatter over 'data' (ZeRO)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros = reshard_grads(zeros)
+            (grads, loss), _ = jax.lax.scan(body, (zeros, 0.0), parts)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        lr = warmup_cosine(opt_state.step, 3e-4, 2000, 100_000)
+        params, opt_state, _ = adamw.update(grads, opt_state, lr)
+        return params, opt_state, loss
+    return train_step
+
+
+def build_prefill_step(model: LM):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def build_decode_step(model: LM):
+    def decode_step(params, cache, token, t):
+        return model.decode_step(params, cache, token, t)
+    return decode_step
+
+
+# ----------------------------------------------------------- HLO collectives
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?[^=]*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=(%[\w\.\-]+), body=(%[\w\.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\)\s*->")
+_LEAD_DIM_RE = re.compile(r"[a-z0-9]+\[(\d+)[,\]]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _wire_bytes(op: str, size: int, g: int) -> float:
+    """Per-device wire-byte model:
+    all-reduce: 2·S·(g-1)/g (ring RS+AG); all-gather/reduce-scatter:
+    S·(g-1)/g; all-to-all / collective-permute: S."""
+    if op == "all-reduce":
+        return 2 * size * (g - 1) / g
+    if op in ("all-gather", "reduce-scatter"):
+        return size * (g - 1) / g
+    return float(size)
+
+
+def parse_collectives(hlo: str, scan_lengths=()) -> Dict[str, Any]:
+    """Trip-count-aware collective accounting over the post-SPMD HLO.
+
+    XLA text lists each ``while`` body once; collectives inside execute
+    trip-count times.  Trip counts are inferred by matching leading dims of
+    the while carry tensors against the known scan lengths of the lowered
+    program (layer count, group count, query-chunk count, ...) — the same
+    undercount that makes cost_analysis unusable for scanned programs (see
+    EXPERIMENTS.md §Roofline accounting).
+    """
+    # ---- split into computation blocks -------------------------------------
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line.startswith(" "):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    comps["__entry__"] = comps[cur]
+                continue
+        if cur is not None and line.strip().startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line.strip())
+
+    cand = sorted(set(int(c) for c in scan_lengths if c and c > 1))
+
+    # Trip count of a while body: scans dynamic-slice the stacked xs along
+    # dim 0 by the induction variable — the operand's leading dim IS the trip
+    # count.  (Leading-dim pattern matching against known scan lengths is the
+    # fallback; it can collide — e.g. an SSD chunk tensor inside a 6-layer
+    # group scan carry — so the dynamic-slice evidence wins.)
+    _DEF_RE = re.compile(r"^(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+    _DS_RE = re.compile(r"dynamic-slice\((%[\w\.\-]+)")
+
+    def body_trip(body_name: str) -> Optional[int]:
+        lines = comps.get(body_name, ())
+        shapes = {}
+        for ln in lines:
+            d = _DEF_RE.match(ln)
+            if d:
+                dims = [int(x) for x in d.group(3).split(",") if x.strip()]
+                shapes[d.group(1)] = dims
+        votes: Dict[int, int] = {}
+        for ln in lines:
+            d = _DEF_RE.match(ln)
+            if not d:
+                continue
+            res = [int(x) for x in d.group(3).split(",") if x.strip()]
+            if " dynamic-slice(" in ln:
+                m = _DS_RE.search(ln)
+                op_shape = shapes.get(m.group(1)) if m else None
+                if (op_shape and res and len(op_shape) == len(res)
+                        and res[0] == 1 and op_shape[0] > 1):
+                    votes[op_shape[0]] = votes.get(op_shape[0], 0) + 1
+            elif "dynamic-slice" in d.group(1) and "fusion(" in ln:
+                # dynamic-slice+bitcast fusion: (N, ...) -> (...) lead dropped
+                fm = re.search(r"fusion\((%[\w\.\-]+)", ln)
+                op_shape = shapes.get(fm.group(1)) if fm else None
+                if (op_shape and len(op_shape) == len(res) + 1
+                        and op_shape[1:] == res and op_shape[0] > 1):
+                    votes[op_shape[0]] = votes.get(op_shape[0], 0) + 1
+                elif (op_shape and res and len(op_shape) == len(res)
+                        and res[0] == 1 and op_shape[0] > 1):
+                    votes[op_shape[0]] = votes.get(op_shape[0], 0) + 1
+        if votes:
+            return max(votes, key=lambda k: (votes[k], -k))
+        return None
+
+    def trip_of(line: str, body_name: str) -> int:
+        t = body_trip(body_name)
+        if t is not None:
+            return t
+        lead = [int(x) for x in _LEAD_DIM_RE.findall(line.split(" while(")[0])]
+        matches = [c for c in cand if c in lead]
+        return max(matches) if matches else 1
+
+    # ---- per-computation direct cost + child whiles -------------------------
+    direct: Dict[str, Dict] = {}
+    children: Dict[str, list] = {}
+    for name, lines in comps.items():
+        d = {"counts": {}, "by_type_bytes": {}, "wire_bytes": 0.0}
+        ch = []
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                ch.append((wm.group(2), trip_of(line, wm.group(2))))
+                continue
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            lhs = line.split("=")[0]
+            if "-done" in lhs:
+                continue
+            op, dtype, dims = m.group(1), m.group(2), m.group(3)
+            size = _shape_bytes(dtype, dims)
+            g = None
+            gm = _GROUP_RE.search(line)
+            if gm:
+                g = len([x for x in gm.group(1).split(",") if x.strip()])
+            else:
+                gi = _GROUP_IOTA_RE.search(line)
+                if gi:
+                    g = int(gi.group(2))
+            g = g or 2
+            wire = _wire_bytes(op, size, g)
+            d["counts"][op] = d["counts"].get(op, 0) + 1
+            d["by_type_bytes"][op] = d["by_type_bytes"].get(op, 0.0) + wire
+            d["wire_bytes"] += wire
+        direct[name] = d
+        children[name] = ch
+
+    # ---- roll up from the entry with multiplicities -------------------------
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def rollup(name: str):
+        d = direct.get(name, {"counts": {}, "by_type_bytes": {},
+                              "wire_bytes": 0.0})
+        total = dict(wire_bytes=d["wire_bytes"],
+                     counts=dict(d["counts"]),
+                     by_type_bytes=dict(d["by_type_bytes"]))
+        for child, trip in children.get(name, ()):
+            sub = rollup(child)
+            total["wire_bytes"] += trip * sub["wire_bytes"]
+            for k, v in sub["counts"].items():
+                total["counts"][k] = total["counts"].get(k, 0) + trip * v
+            for k, v in sub["by_type_bytes"].items():
+                total["by_type_bytes"][k] = (total["by_type_bytes"].get(k, 0.0)
+                                             + trip * v)
+        return total
+
+    out = rollup("__entry__")
+    out["static_op_lines"] = sum(d["counts"].get(k, 0) for d in direct.values()
+                                 for k in d["counts"])
+    return out
+
+
+# -------------------------------------------------------------------- runner
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    B, T, mode = shp["global_batch"], shp["seq_len"], shp["mode"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    bax = SH.batch_axis(mesh, B)
+    rules = SH.logical_rules(mesh, B, cfg)
+    # §Perf: with head-sharded attention the per-chunk score block is 16×
+    # smaller, so larger query chunks are free — and collectives sunk into
+    # chunk loops drop proportionally (cell-A iterations 4-7)
+    from repro.models import layers as LY
+    if os.environ.get("REPRO_CHUNK_Q") is None:
+        LY.CHUNK_Q = 512 if rules.get("heads") else 128
+    model = LM(cfg, remat=(mode == "train"))
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mode": mode,
+        "mesh": dict(mesh.shape), "chips": chips,
+        "global_batch": B, "seq_len": T, "ok": False,
+    }
+    total_p, active_p = param_count(cfg)
+    rec["params_total"] = total_p
+    rec["params_active"] = active_p
+
+    # microbatches: keep ~4 sequences per device per microbatch (production
+    # grad-accumulation; bounds live activations under full remat)
+    dp = 1
+    if bax is not None:
+        axes = bax if isinstance(bax, tuple) else (bax,)
+        dp = int(np.prod([mesh.shape[a] for a in axes]))
+    per_dev_batch = max(1, B // dp)
+    microbatches = max(1, per_dev_batch // 2) if mode == "train" else 1
+    rec["microbatches"] = microbatches
+
+    t0 = time.time()
+    params, pspecs, pshapes = abstract_params(model, mesh)
+    with mesh, logical_axis_rules(mesh, rules):
+        if mode == "train":
+            opt = abstract_opt_state(pshapes, pspecs, mesh)
+            batch = train_inputs(cfg, B, T, mesh, bax)
+            total_p, _ = param_count(cfg)
+            hoist = (total_p >= SH.FSDP_THRESHOLD
+                     and os.environ.get("REPRO_HOIST_FSDP", "0") == "1")
+            rec["hoist_fsdp"] = hoist
+            fn = jax.jit(build_train_step(model, microbatches, mesh, pspecs,
+                                          hoist_fsdp=hoist),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params, opt, batch)
+            tokens = B * T
+        elif mode == "prefill":
+            cache = abstract_cache(model, B, T, mesh, bax)
+            batch = train_inputs(cfg, B, T, mesh, bax)
+            batch.pop("labels", None)
+            fn = jax.jit(build_prefill_step(model), donate_argnums=(2,))
+            lowered = fn.lower(params, batch, cache)
+            tokens = B * T
+        else:  # decode
+            cache = abstract_cache(model, B, T, mesh, bax)
+            if cfg.n_codebooks > 1:
+                tok = sds((B, 1, cfg.n_codebooks), jnp.int32, mesh, P(bax))
+            else:
+                tok = sds((B, 1), jnp.int32, mesh, P(bax))
+            t_in = sds((), jnp.int32, mesh, P())
+            fn = jax.jit(build_decode_step(model), donate_argnums=(1,))
+            lowered = fn.lower(params, cache, tok, t_in)
+            tokens = B
+    rec["lower_s"] = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = time.time() - t0
+
+    # ---- memory ------------------------------------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+        if verbose:
+            print("memory_analysis:", rec["memory"])
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    # ---- cost --------------------------------------------------------------
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed", "transcendentals",
+                             "optimal_seconds")}
+        if verbose:
+            print("cost_analysis flops:", rec["cost"].get("flops"))
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+
+    # ---- collectives (trip-count-aware) -------------------------------------
+    from repro.models.layers import CHUNK_Q
+    from repro.models.model import derive_pattern
+    pat = derive_pattern(cfg)
+    scan_lengths = [pat.n_scan, pat.n_groups, pat.group_local, pat.n_tail,
+                    microbatches]
+    if mode != "decode":
+        scan_lengths.append(T // CHUNK_Q)
+        if cfg.ssm is not None:
+            scan_lengths.append(T // cfg.ssm.chunk)
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo, tuple(scan_lengths))
+    rec["hlo_bytes"] = len(hlo)
+    rec["tokens_per_step"] = tokens
+
+    # ---- analytic cost model (see launch/analytic.py for why) ---------------
+    from repro.launch.analytic import analytic_cost
+    rec["analytic"] = analytic_cost(cfg, B, T, mode)
+    rec["model_flops"] = rec["analytic"]["model_flops"]
+    rec["ok"] = True
+    return rec
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    pods = "pod2" if multi_pod else "pod1"
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{pods}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                if not shape_applicable(arch, shape):
+                    _write_skip(arch, shape)
+                    continue
+                for mp in (False, True):
+                    p = cell_path(arch, shape, mp)
+                    if os.path.exists(p) and not args.force:
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    print(">>", " ".join(cmd), flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, mp))
+        print("FAILURES:", failures)
+        return 1 if failures else 0
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for mp in meshes:
+        rec = run_cell(args.arch, args.shape, mp)
+        with open(cell_path(args.arch, args.shape, mp), "w") as f:
+            json.dump(rec, f, indent=2)
+        print(json.dumps({k: rec[k] for k in
+                          ("arch", "shape", "chips", "ok", "lower_s",
+                           "compile_s")}))
+    return 0
+
+
+def _write_skip(arch: str, shape: str) -> None:
+    for mp in (False, True):
+        with open(cell_path(arch, shape, mp), "w") as f:
+            json.dump({"arch": arch, "shape": shape, "ok": True,
+                       "skipped": "full-attention arch at 500k (DESIGN.md §5)",
+                       "chips": 512 if mp else 256}, f, indent=2)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16×16 = 256 chips ("data", "model").
+Multi-pod: 2×16×16 = 512 chips ("pod", "data", "model") — the "pod" axis is
+the slow (DCN) dimension; DP and the paper-derived relay/compressed
+collectives run across it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run via launch/dryrun.py "
+            "(it sets --xla_force_host_platform_device_count=512)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(n_devices: int = 1):
+    """Tiny mesh over available devices (CPU tests)."""
+    n = min(n_devices, len(jax.devices()))
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,61 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names; the launcher
+installs a rules table mapping logical names -> mesh axes.  Without an active
+context (CPU unit tests), ``constrain`` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: Optional[Tuple[Mesh, dict]] = None
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: dict):
+    """rules: logical name -> mesh axis (str | tuple | None)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def current_rules() -> Optional[Tuple[Mesh, dict]]:
+    return _ACTIVE
+
+
+def resolve(names: Sequence[Optional[str]]) -> Optional[P]:
+    if _ACTIVE is None:
+        return None
+    _, rules = _ACTIVE
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Attach a sharding constraint using logical axis names (no-op w/o rules).
+
+    Divisibility-guarded: an axis whose mesh size does not divide the tensor
+    dim is dropped (e.g. "heads"->model on a 9-head model with tp=16)."""
+    if _ACTIVE is None:
+        return x
+    mesh, rules = _ACTIVE
+    spec = resolve(names)
+    fixed = []
+    for dim, ax in zip(x.shape, tuple(spec)):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if (dim % size == 0 and dim >= size) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,71 @@
+"""Stub modality frontends.
+
+Per the assignment, ``[audio]``/``[vlm]`` entries are transformer BACKBONES;
+the modality frontend is a stub whose only job is to provide shape-correct
+inputs:
+
+* qwen2-vl: the vision tower + merger is stubbed — ``input_specs`` yields
+  precomputed, already-merged patch/text embeddings (B, T, d) plus the 3-stream
+  M-RoPE position ids (temporal, height, width).
+* musicgen: EnCodec is stubbed — the LM consumes its 4 discrete codebook token
+  streams directly (B, T, 4), which is the real MusicGen interface.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def mrope_position_ids(batch: int, seq: int) -> np.ndarray:
+    """Deterministic stand-in M-RoPE ids: a leading image patch grid followed
+    by text (t = h = w advancing together), shape (3, B, T)."""
+    grid = min(seq // 4, 256)
+    side = max(1, int(np.sqrt(grid)))
+    t = np.zeros((seq,), np.int32)
+    h = np.zeros((seq,), np.int32)
+    w = np.zeros((seq,), np.int32)
+    n_img = side * side
+    idx = np.arange(n_img)
+    t[:n_img] = 0
+    h[:n_img] = idx // side
+    w[:n_img] = idx % side
+    text = np.arange(seq - n_img, dtype=np.int32) + side
+    t[n_img:] = text
+    h[n_img:] = text
+    w[n_img:] = text
+    out = np.stack([t, h, w])[:, None, :]
+    return np.broadcast_to(out, (3, batch, seq)).copy()
+
+
+def synth_embeddings(key, batch: int, seq: int, d: int) -> jnp.ndarray:
+    return jax.random.normal(key, (batch, seq, d), jnp.bfloat16) * 0.02
+
+
+def train_batch_stub(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
+                     ) -> Dict[str, jnp.ndarray]:
+    """Concrete (allocated) batch for smoke tests."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, jnp.ndarray] = {}
+    if cfg.n_codebooks > 1:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq, cfg.n_codebooks)), jnp.int32)
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq, cfg.n_codebooks)), jnp.int32)
+    elif not cfg.embed_inputs:
+        key = jax.random.PRNGKey(seed)
+        out["embeds"] = synth_embeddings(key, batch, seq, cfg.d_model)
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    if cfg.mrope:
+        out["positions3"] = jnp.asarray(mrope_position_ids(batch, seq))
+    return out

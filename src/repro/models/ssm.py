@@ -1,0 +1,306 @@
+"""State-space blocks: Mamba1 (S6 selective scan) and Mamba2 (SSD).
+
+Hardware adaptation (see DESIGN.md): the CUDA selective-scan kernel is
+re-thought for TPU as a *chunked* scan — sequential ``lax.scan`` over chunks
+(bounding the materialized (B, Lc, d_in, d_state) working set to VMEM-friendly
+sizes) with a parallel associative scan inside each chunk.  The Pallas kernel
+in ``kernels/mamba_scan`` implements the same chunking with explicit BlockSpecs;
+this module is the pure-jnp reference path used for dry-run lowering.
+
+All scan math in f32; projections bf16.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.axes import constrain
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.layers import Params, _dense_init, init_rmsnorm, rmsnorm
+
+
+# ------------------------------------------------------------------ conv1d
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray],
+                  state: Optional[jnp.ndarray] = None,
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  x: (B, T, C); w: (d_conv, C).
+
+    state: (B, d_conv-1, C) trailing inputs from the previous call (decode).
+    Returns (y (B,T,C), new_state (B, d_conv-1, C)).
+    """
+    B, T, C = x.shape
+    dk = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, dk - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)              # (B, T+dk-1, C)
+    y = jnp.zeros((B, T, C), jnp.float32)
+    for i in range(dk):                                    # dk is 4: unrolled
+        y = y + xp[:, i:i + T, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    new_state = xp[:, T:, :]
+    return y.astype(x.dtype), new_state
+
+
+# ================================================================== Mamba1
+class Mamba1State(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv-1, d_in)
+    h: jnp.ndarray      # (B, d_in, d_state) f32
+
+
+def init_mamba1(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 8)
+    A = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None], (d_in, 1))
+    return {
+        "in_x": _dense_init(ks[0], (d, d_in), dtype),
+        "in_z": _dense_init(ks[1], (d, d_in), dtype),
+        "conv_w": _dense_init(ks[2], (s.d_conv, d_in), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": _dense_init(ks[3], (d_in, dt_rank + 2 * s.d_state), dtype),
+        "dt_proj": _dense_init(ks[4], (dt_rank, d_in), dtype),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(A),                               # (d_in, d_state) f32
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _dense_init(ks[5], (d_in, d), dtype),
+    }
+
+
+def _selective_scan_chunked(u, dt, B_, C_, A, h0, chunk: int):
+    """u, dt: (B, T, d_in) f32; B_, C_: (B, T, n) f32; A: (d_in, n) f32;
+    h0: (B, d_in, n) f32.  Returns (y (B,T,d_in) f32, hT).
+
+    Sequential over T/chunk chunks; parallel associative scan within a chunk.
+    """
+    Bsz, T, d_in = u.shape
+    n = A.shape[1]
+    Lc = min(chunk, T)
+    assert T % Lc == 0, (T, Lc)
+    nc = T // Lc
+
+    def chunk_step(h, args):
+        uc, dtc, Bc, Cc = args                     # (B, Lc, ...)
+        a = jnp.exp(dtc[..., None] * A)            # (B, Lc, d_in, n)
+        b = (dtc * uc)[..., None] * Bc[:, :, None, :]
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        a_sc, b_sc = jax.lax.associative_scan(comb, (a, b), axis=1)
+        hs = a_sc * h[:, None] + b_sc              # (B, Lc, d_in, n)
+        y = jnp.einsum("bldn,bln->bld", hs, Cc)
+        return hs[:, -1], y
+
+    u_c = u.reshape(Bsz, nc, Lc, d_in)
+    dt_c = dt.reshape(Bsz, nc, Lc, d_in)
+    B_c = B_.reshape(Bsz, nc, Lc, n)
+    C_c = C_.reshape(Bsz, nc, Lc, n)
+    hT, ys = jax.lax.scan(
+        chunk_step, h0,
+        (u_c.transpose(1, 0, 2, 3), dt_c.transpose(1, 0, 2, 3),
+         B_c.transpose(1, 0, 2, 3), C_c.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, T, d_in)
+    return y, hT
+
+
+def mamba1_block(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 state: Optional[Mamba1State] = None,
+                 return_state: bool = False,
+                 ) -> Tuple[jnp.ndarray, Optional[Mamba1State]]:
+    """x: (B, T, d).  Train: state=None.  Prefill: return_state=True.
+    Decode: state given (T may be 1)."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    d_in = s.expand * d
+    dt_rank = max(1, d // 16)
+
+    # TP: the expanded channel dim (d_in) stays sharded through conv/silu/scan
+    xz = constrain(x @ p["in_x"], ("batch", "seq", "ssm_ch"))   # (B,T,d_in)
+    z = constrain(x @ p["in_z"], ("batch", "seq", "ssm_ch"))
+    conv_state = state.conv if state is not None else None
+    xc, new_conv = causal_conv1d(xz, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+
+    proj = (xc.astype(x.dtype) @ p["x_proj"]).astype(jnp.float32)
+    dt, B_, C_ = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    dt = constrain(dt, ("batch", "seq", "ssm_ch"))
+    A = -jnp.exp(p["A_log"])                               # (d_in, n)
+
+    h0 = state.h if state is not None else jnp.zeros((B, d_in, s.d_state), jnp.float32)
+    if T == 1 and state is not None:
+        # recurrent single step
+        a = jnp.exp(dt[:, 0, :, None] * A)                 # (B, d_in, n)
+        h = a * h0 + (dt[:, 0] * xc[:, 0])[..., None] * B_[:, 0, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_[:, 0])[:, None]
+        hT = h
+    else:
+        y, hT = _selective_scan_chunked(xc, dt, B_, C_, A, h0, s.chunk)
+    y = y + p["D"] * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["out_proj"]
+    new_state = Mamba1State(new_conv, hT) if (return_state or state is not None) else None
+    return out, new_state
+
+
+# ================================================================== Mamba2
+class Mamba2State(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv-1, conv_dim)
+    h: jnp.ndarray      # (B, nheads, headdim, d_state) f32
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.headdim
+    G = s.n_groups
+    ks = jax.random.split(key, 10)
+    return {
+        "in_z": _dense_init(ks[0], (d, d_in), dtype),
+        "in_x": _dense_init(ks[1], (d, d_in), dtype),
+        "in_B": _dense_init(ks[2], (d, G * s.d_state), dtype),
+        "in_C": _dense_init(ks[3], (d, G * s.d_state), dtype),
+        "in_dt": _dense_init(ks[4], (d, nheads), dtype),
+        # separate depthwise convs for x / B / C: concatenating the 'model'-
+        # sharded x with replicated B/C would force a gather at every use
+        # (§Perf cell B iteration 3); depthwise conv is channelwise so the
+        # split is mathematically identical
+        "conv_x_w": _dense_init(ks[5], (s.d_conv, d_in), dtype, scale=0.5),
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_B_w": _dense_init(ks[7], (s.d_conv, G * s.d_state), dtype, scale=0.5),
+        "conv_B_b": jnp.zeros((G * s.d_state,), dtype),
+        "conv_C_w": _dense_init(ks[8], (s.d_conv, G * s.d_state), dtype, scale=0.5),
+        "conv_C_b": jnp.zeros((G * s.d_state,), dtype),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "A_log": jnp.zeros((nheads,), jnp.float32),        # A = -exp(A_log) = -1
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm": init_rmsnorm(d_in, dtype),
+        "out_proj": _dense_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., L) -> (..., L, L) lower-triangular cumulative sums
+    segsum[..., i, j] = sum_{k=j+1..i} x[..., k]  (i >= j), -inf above diag."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, B_, C_, A, h0, chunk: int):
+    """SSD (Mamba2) chunked algorithm.
+
+    xh: (B, T, H, P) f32; dt: (B, T, H) f32 (post-softplus);
+    B_, C_: (B, T, G, N) f32; A: (H,) f32 (negative); h0: (B, H, P, N) f32.
+    Returns (y (B,T,H,P), hT).
+    """
+    Bsz, T, H, P = xh.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Lc = min(chunk, T)
+    assert T % Lc == 0
+    nc = T // Lc
+    rep = H // G
+
+    def to_chunks(t):
+        return t.reshape(Bsz, nc, Lc, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    xc, dtc = to_chunks(xh), to_chunks(dt)
+    Bc, Cc = to_chunks(B_), to_chunks(C_)
+
+    def chunk_step(h, args):
+        x_, dt_, b_, c_ = args                   # (B, Lc, H, P), (B, Lc, H), (B, Lc, G, N)
+        da = dt_ * A                             # (B, Lc, H)
+        # intra-chunk (diagonal blocks)
+        L = jnp.exp(_segsum(da.transpose(0, 2, 1)))          # (B, H, Lc, Lc)
+        bg = jnp.repeat(b_, rep, axis=2)                     # (B, Lc, H, N)
+        cg = jnp.repeat(c_, rep, axis=2)
+        scores = jnp.einsum("blhn,bshn->bhls", cg, bg)       # (B,H,Lc,Lc)
+        M = scores * L
+        y_diag = jnp.einsum("bhls,bsh,bshp->blhp", M, dt_, x_)
+        # chunk state contribution from h (carry)
+        a_cum = jnp.exp(jnp.cumsum(da, axis=1))              # (B, Lc, H)
+        y_off = jnp.einsum("blhn,bhpn->blhp", cg, h) * a_cum[..., None]
+        # new carry
+        a_tail = jnp.exp(jnp.cumsum(da, axis=1)[:, -1:, :] - jnp.cumsum(da, axis=1))  # prod a_{s+1..Lc}
+        S = jnp.einsum("bshn,bsh,bshp->bhpn", bg * a_tail[..., None], dt_, x_)
+        a_all = jnp.exp(jnp.sum(da, axis=1))                 # (B, H)
+        h_new = h * a_all[..., None, None] + S
+        return h_new, y_diag + y_off
+
+    hT, ys = jax.lax.scan(chunk_step, h0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, T, H, P)
+    return y, hT
+
+
+def mamba2_block(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 state: Optional[Mamba2State] = None,
+                 return_state: bool = False,
+                 ) -> Tuple[jnp.ndarray, Optional[Mamba2State]]:
+    s = cfg.ssm
+    B, T, d = x.shape
+    d_in = s.expand * d
+    H = d_in // s.headdim
+    P, G, N = s.headdim, s.n_groups, s.d_state
+
+    z = constrain(x @ p["in_z"], ("batch", "seq", "ssm_ch"))
+    xx = constrain(x @ p["in_x"], ("batch", "seq", "ssm_ch"))
+    xB = x @ p["in_B"]
+    xC = x @ p["in_C"]
+    dt_raw = (x @ p["in_dt"]).astype(jnp.float32)
+    # decode conv state holds the concatenated (x|B|C) trailing window; the
+    # slices are tiny so splitting it is free
+    cs = state.conv if state is not None else None
+    cs_x = cs[..., :d_in] if cs is not None else None
+    cs_B = cs[..., d_in:d_in + G * N] if cs is not None else None
+    cs_C = cs[..., d_in + G * N:] if cs is not None else None
+    x_c, ncv_x = causal_conv1d(xx, p["conv_x_w"], p["conv_x_b"], cs_x)
+    B_c, ncv_B = causal_conv1d(xB, p["conv_B_w"], p["conv_B_b"], cs_B)
+    C_c, ncv_C = causal_conv1d(xC, p["conv_C_w"], p["conv_C_b"], cs_C)
+    new_conv = jnp.concatenate([ncv_x, ncv_B, ncv_C], axis=-1)
+    # heads stay sharded through the SSD scan (B/C are per-group, replicated)
+    xh = constrain(jax.nn.silu(x_c.astype(jnp.float32)).reshape(B, T, H, P),
+                   ("batch", "seq", "ssm_heads", None))
+    B_ = jax.nn.silu(B_c.astype(jnp.float32)).reshape(B, T, G, N)
+    C_ = jax.nn.silu(C_c.astype(jnp.float32)).reshape(B, T, G, N)
+    dt = constrain(jax.nn.softplus(dt_raw + p["dt_bias"]),
+                   ("batch", "seq", "ssm_heads"))                 # (B,T,H)
+    A = -jnp.exp(p["A_log"])                                       # (H,)
+
+    h0 = state.h if state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+    if T == 1 and state is not None:
+        a = jnp.exp(dt[:, 0] * A)                                  # (B,H)
+        rep = H // G
+        bg = jnp.repeat(B_[:, 0], rep, axis=1)                     # (B,H,N)
+        cg = jnp.repeat(C_[:, 0], rep, axis=1)
+        dbx = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, 0], xh[:, 0], bg)
+        h = a[..., None, None] * h0 + dbx
+        y = jnp.einsum("bhpn,bhn->bhp", h, cg)[:, None]            # (B,1,H,P)
+        hT = h
+    else:
+        y, hT = _ssd_chunked(xh, dt, B_, C_, A, h0, s.chunk)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, T, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_state = Mamba2State(new_conv, hT) if (return_state or state is not None) else None
+    return out, new_state
+
+
+def init_ssm_block(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    return init_mamba1(key, cfg, dtype) if cfg.ssm.version == 1 else init_mamba2(key, cfg, dtype)
+
+
+def ssm_block(p, cfg, x, state=None, return_state=False):
+    fn = mamba1_block if cfg.ssm.version == 1 else mamba2_block
+    return fn(p, cfg, x, state, return_state)

@@ -1,0 +1,81 @@
+"""AdamW in pure JAX with mixed precision and ZeRO-1-ready state layout.
+
+Params are bf16; optimizer keeps f32 master params and f32 (m, v) moments —
+the classic mixed-precision recipe.  State tensors mirror param shapes, so the
+ZeRO-1 sharding in ``launch/shardings.py`` (optimizer state sharded over the
+``data`` axis) applies transparently: the update is elementwise and therefore
+valid under any sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # int32 scalar
+    master: PyTree             # f32 master params
+    m: PyTree                  # f32 first moment
+    v: PyTree                  # f32 second moment
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init(params: PyTree) -> AdamWState:
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), master=f32(params),
+                      m=zeros(params), v=zeros(params))
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(grads: PyTree, state: AdamWState, lr: jnp.ndarray,
+           cfg: AdamWConfig = AdamWConfig()
+           ) -> Tuple[PyTree, AdamWState, Dict[str, jnp.ndarray]]:
+    """Returns (new bf16 params, new state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, p, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return p, m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_p = treedef.flatten_up_to(state.master)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, p, m, v) for g, p, m, v in zip(flat_g, flat_p, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    bf16_params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.bfloat16), new_p)
+    return bf16_params, AdamWState(step, new_p, new_m, new_v), {
+        "grad_norm": gnorm, "clip_scale": scale}

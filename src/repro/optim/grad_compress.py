@@ -1,0 +1,53 @@
+"""Gradient compression for the slow cross-pod hop (DCN).
+
+Same insight as the paper's relay routing: treat the slow link specially.
+Within a pod, gradients reduce over fast ICI in full precision; across pods
+(2× slower DCN at best) we quantize to int8 with a per-tensor scale before the
+exchange, cutting cross-pod bytes 4×, then dequantize and average.
+
+Implemented as a psum-compatible transform usable inside shard_map or under
+pjit (the quantize/dequantize are elementwise and partition cleanly; the int8
+all-gather over the tiny ``pod`` axis of size P costs P×N bytes vs 4N for an
+f32 all-reduce — a win for P ≤ 4, i.e. exactly the cross-pod regime).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jnp.ndarray):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def psum_compressed(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8 mean-reduce over ``axis_name`` (call inside shard_map).
+
+    all_gather int8 shards + per-source scales, dequantize, average locally.
+    """
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)            # (P, ...) int8
+    ss = jax.lax.all_gather(scale, axis_name)        # (P,)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+    return jnp.mean(deq, axis=0).astype(x.dtype)
+
+
+def compress_tree(grads: PyTree, axis_name: str) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda g: psum_compressed(g, axis_name), grads)
+
+
+def compression_error(x: jnp.ndarray) -> jnp.ndarray:
+    q, s = quantize_int8(x)
+    return jnp.max(jnp.abs(dequantize_int8(q, s) - x.astype(jnp.float32)))

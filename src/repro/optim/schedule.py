@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, s / max(1, warmup))
+    prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, peak_lr * cos)
+
+
+def constant(step, lr: float):
+    return jnp.full_like(step, lr, dtype=jnp.float32)

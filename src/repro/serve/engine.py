@@ -1,0 +1,115 @@
+"""Batched serving engine (wave-scheduled static batching).
+
+Requests are admitted in waves of up to B: prompts are left-padded to a
+common length, prefilled in one batched call, then decoded greedily one
+token/step for the whole wave; finished requests exit the wave, and when the
+wave drains the next one is admitted.  Prefill is jitted per (bucketed)
+prompt length; decode is jitted once.
+
+The decode step this engine drives is exactly what the ``decode_32k`` /
+``long_500k`` dry-run cells lower.  (True continuous batching needs per-slot
+position vectors in the cache-update path — noted as future work in
+DESIGN.md; wave scheduling keeps the cache math exact.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import LM
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (T,) or (T, K) int32
+    max_new_tokens: int = 16
+    out_tokens: List = field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int) -> int:
+    b = 16
+    while b < n:
+        b *= 2
+    return b
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.model = LM(cfg, remat=False)
+        self.params = params
+        self.B = max_batch
+        self.S = max_seq
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(self.model.prefill)
+        self._queue: List[Request] = []
+        self._next_rid = 0
+        self.waves = 0
+
+    # ------------------------------------------------------------------- api
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new_tokens))
+        return rid
+
+    def run_to_completion(self) -> List[Request]:
+        done: List[Request] = []
+        while self._queue:
+            done.extend(self._run_wave())
+        return done
+
+    # ------------------------------------------------------------------ wave
+    def _run_wave(self) -> List[Request]:
+        wave = [self._queue.pop(0) for _ in range(min(self.B, len(self._queue)))]
+        self.waves += 1
+        B = self.B
+        lens = [r.prompt.shape[0] for r in wave]
+        T = _bucket(max(lens))
+        multik = self.cfg.n_codebooks > 1
+        shape = (B, T, self.cfg.n_codebooks) if multik else (B, T)
+        toks = np.zeros(shape, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, T - lens[i]:T] = r.prompt     # left-pad
+        cache = self.model.init_cache(B, self.S)
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
+                                      cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1)).reshape(B, -1)
+        t = T
+        active = {i: r for i, r in enumerate(wave)}
+        for i, r in active.items():
+            r.out_tokens.append(_tok_out(nxt[i], multik))
+        finished: List[Request] = []
+        while active and t < self.S - 1:
+            cur = np.zeros((B, 1, self.cfg.n_codebooks) if multik else (B, 1),
+                           np.int32)
+            for i, r in active.items():
+                cur[i, 0] = r.out_tokens[-1]
+            lg, cache = self._decode(self.params, cache, jnp.asarray(cur),
+                                     jnp.int32(t))
+            nxt = np.asarray(jnp.argmax(lg, axis=-1)).reshape(B, -1)
+            t += 1
+            for i, r in list(active.items()):
+                r.out_tokens.append(_tok_out(nxt[i], multik))
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    finished.append(r)
+                    del active[i]
+        for r in active.values():
+            r.done = True
+            finished.append(r)
+        return finished
+
+
+def _tok_out(row: np.ndarray, multik: bool):
+    return [int(v) for v in row] if multik else int(row[0])

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 CPU device.
+# Multi-device tests (relay collectives) spawn subprocesses that set the flag.
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.faults import FaultInjector, Notifier, RetryPolicy
+from repro.core.pause import DAY, PauseManager
+from repro.core.routes import GB, make_catalog, paper_route_graph
+from repro.core.scheduler import ReplicationPolicy, ReplicationScheduler
+from repro.core.transfer_table import Status, TransferTable
+from repro.core.transport import SimClock, SimulatedTransport
+from repro.kernels.checksum.ref import checksum_bytes_np
+from repro.optim.grad_compress import dequantize_int8, quantize_int8
+
+SLOW = settings(max_examples=15, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------- checksum
+@given(st.binary(min_size=1, max_size=4096),
+       st.integers(min_value=0, max_value=32767))
+@settings(max_examples=60, deadline=None)
+def test_checksum_detects_single_bit_flip(data, pos_seed):
+    pos = pos_seed % len(data)
+    bit = 1 << (pos_seed % 8)
+    mutated = bytearray(data)
+    mutated[pos] ^= bit
+    assert checksum_bytes_np(data) != checksum_bytes_np(bytes(mutated))
+
+
+@given(st.binary(min_size=0, max_size=2048))
+@settings(max_examples=40, deadline=None)
+def test_checksum_deterministic(data):
+    assert checksum_bytes_np(data) == checksum_bytes_np(data)
+
+
+@given(st.binary(min_size=2, max_size=512), st.integers(1, 7))
+@settings(max_examples=40, deadline=None)
+def test_checksum_detects_truncation(data, k):
+    k = k % len(data) or 1
+    assert checksum_bytes_np(data) != checksum_bytes_np(data[:-k])
+
+
+# ------------------------------------------------------------ quantization
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=256))
+@settings(max_examples=50, deadline=None)
+def test_int8_quantization_error_bound(vals):
+    x = np.asarray(vals, np.float32)
+    q, s = quantize_int8(x)
+    err = np.max(np.abs(dequantize_int8(q, s) - x))
+    # half-step rounding bound
+    assert err <= float(s) * 0.5 + 1e-6
+
+
+# --------------------------------------------------- scheduler invariants
+@given(seed=st.integers(0, 10_000),
+       n=st.integers(4, 14),
+       maint_start=st.floats(0.1, 5.0),
+       maint_days=st.floats(0.1, 3.0))
+@SLOW
+def test_campaign_always_converges_and_loses_nothing(seed, n, maint_start,
+                                                     maint_days):
+    """For random catalogs, fault seeds, and maintenance windows: the Figure-4
+    machine terminates with every dataset SUCCEEDED (or QUARANTINED with a
+    notification) at every replica, and no table row is ever lost."""
+    graph = paper_route_graph()
+    catalog = {d.path: d for d in make_catalog(
+        n, total_bytes=n * GB, total_files=n * 50, total_dirs=n * 5,
+        seed=seed)}
+    clock = SimClock()
+    pause = PauseManager()
+    pause.add_window("ALCF", maint_start * DAY,
+                     (maint_start + maint_days) * DAY)
+    injector = FaultInjector(seed=seed)
+    notifier = Notifier()
+    retry = RetryPolicy(max_retries=3, backoff_s=60.0)
+    transport = SimulatedTransport(graph, clock, pause, injector, notifier,
+                                   retry)
+    table = TransferTable()
+    sched = ReplicationScheduler(table, transport, catalog,
+                                 ReplicationPolicy("LLNL", ("ALCF", "OLCF")),
+                                 retry, notifier)
+    sched.populate()
+    assert table.count_status(*list(Status)) == 2 * len(catalog)
+    while clock.now < 100 * DAY and not sched.done():
+        sched.step(clock.now)
+        clock.advance(1800.0)
+        transport.tick()
+    assert sched.done(), "campaign did not converge"
+    rows = table.all()
+    assert len(rows) == 2 * len(catalog)          # no row lost
+    for r in rows:
+        assert r.status in (Status.SUCCEEDED, Status.QUARANTINED)
+        if r.status == Status.QUARANTINED:
+            assert any(r.dataset in m for m in notifier.notifications)
+    # concurrency cap was never breached is enforced structurally; check the
+    # relay property: LLNL read each dataset at most (1 + retries) times
+    for ds in catalog:
+        llnl_reads = sum(1 for r in rows
+                         if r.dataset == ds and r.source == "LLNL"
+                         and r.status == Status.SUCCEEDED)
+        assert llnl_reads <= 2
+
+
+# ----------------------------------------------------- data pipeline resume
+@given(seed=st.integers(0, 1000), cut=st.integers(1, 12))
+@settings(max_examples=20, deadline=None)
+def test_sharded_dataset_exact_resume(tmp_path_factory, seed, cut):
+    from repro.data.sharded import IterState, ShardedDataset, write_shards
+    root = str(tmp_path_factory.mktemp(f"ds{seed}_{cut}"))
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 1000, 4096, dtype=np.int32)
+    write_shards(root, toks, shard_len=256)
+    ds = ShardedDataset(root)
+    it = ds.batches(batch=2, seq=33)
+    ref, states = [], []
+    for _ in range(cut + 4):
+        b, s = next(it)
+        ref.append(b["tokens"].copy())
+        states.append(s)
+    # resume from the state after batch `cut`
+    it2 = ds.batches(batch=2, seq=33, state=states[cut])
+    for i in range(cut + 1, cut + 4):
+        b, _ = next(it2)
+        np.testing.assert_array_equal(b["tokens"], ref[i])
