@@ -11,6 +11,10 @@ Full scale is 2291 datasets; ``--scale`` trades fidelity for runtime
 (benchmarks/run.py uses 0.25 to stay within CI budgets; the duration figure
 is scale-invariant because bandwidths and totals shrink together only when
 --scale-bytes is also given — by default only file counts shrink).
+
+``--compare-engines`` additionally replays the paper-2022 scenario under the
+fixed-step driver AND the event-driven core (``repro.scenarios.events``) and
+records the wall-clock speedup into ``BENCH_scenarios.json``.
 """
 from __future__ import annotations
 
@@ -52,12 +56,58 @@ def replay(n_datasets: int = 2291, scale: float = 1.0, seed: int = 0,
     return out, rep
 
 
+def compare_engines(n_datasets: int = 48, scale: float = 1.0, seed: int = 0):
+    """Step-driven vs event-driven replay of the paper-2022 scenario: same
+    catalog, calendar, and fault seeds; records wall clock, driver
+    iterations, and the behavior deltas that must stay small."""
+    from repro.scenarios.events import EngineStats, run_scenario
+
+    results = {}
+    for engine in ("step", "events"):
+        stats = EngineStats()
+        t0 = time.time()
+        rep = run_scenario("paper-2022", engine=engine, scale=scale,
+                           seed=seed, n_datasets=n_datasets, stats=stats)
+        results[engine] = {
+            "wall_s": round(time.time() - t0, 3),
+            "iterations": stats.iterations,
+            "duration_days": round(rep.duration_days, 3),
+            "faults_total": rep.faults_total,
+            "faults_max": rep.faults_per_transfer_max,
+            "quarantined": rep.quarantined,
+        }
+    step, ev = results["step"], results["events"]
+    return {
+        "n_datasets": n_datasets,
+        "scale": scale,
+        "seed": seed,
+        "step": step,
+        "events": ev,
+        "speedup": round(step["wall_s"] / max(ev["wall_s"], 1e-9), 2),
+        "duration_delta_pct": round(
+            100.0 * abs(ev["duration_days"] - step["duration_days"])
+            / max(step["duration_days"], 1e-9), 3),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", type=int, default=2291)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--compare-engines", action="store_true",
+                    help="benchmark step vs event engine on paper-2022 and "
+                         "record the speedup in BENCH_scenarios.json")
+    ap.add_argument("--bench-out", default="BENCH_scenarios.json")
     args = ap.parse_args()
+    if args.compare_engines:
+        cmp = compare_engines(n_datasets=min(args.datasets, 48),
+                              scale=args.scale)
+        from repro.scenarios.sweep import emit_bench
+        emit_bench([], path=args.bench_out,
+                   extra={"engine_comparison": cmp})
+        print(json.dumps(cmp, indent=2))
+        return
     out, rep = replay(args.datasets, args.scale)
     print(json.dumps(out, indent=2))
     if args.out:

@@ -1,12 +1,14 @@
-"""The paper, end to end: replicate a catalog from a slow source to two
-replica sites with the Figure-4 scheduler — simulated WAN + live dashboard.
+"""The paper, end to end: replicate a catalog from a slow source to replica
+sites with the Figure-4 scheduler — now driven through a *named scenario*
+from ``repro.scenarios`` (simulated WAN + live dashboard).
 
     PYTHONPATH=src python examples/replication_campaign.py
-        [--datasets 120] [--scale 0.05] [--dashboard]
+        [--scenario paper-2022] [--datasets 120] [--scale 0.05]
+        [--engine events|step] [--dashboard]
 
 Watch for the paper's phases: LLNL->ALCF primary flow, re-route to OLCF
 during ALCF maintenance, ALCF->OLCF relay traffic, permission-failure
-quarantine + human fix, and termination with both replicas complete.
+quarantine + human fix, and termination with all replicas complete.
 """
 import argparse
 import os
@@ -14,53 +16,59 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.campaign import CampaignConfig, build_campaign
 from repro.core.dashboard import render_text
 from repro.core.pause import DAY
+from repro.core.transfer_table import Status
+from repro.scenarios.events import run_world
+from repro.scenarios.registry import get_scenario, list_scenarios
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="paper-2022",
+                    help=f"one of: {', '.join(list_scenarios())}")
     ap.add_argument("--datasets", type=int, default=120)
     ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--engine", choices=("events", "step"), default="events")
     ap.add_argument("--dashboard", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = CampaignConfig(n_datasets=args.datasets, scale=args.scale,
-                         seed=args.seed, step_s=3600.0)
-    (graph, catalog, clock, pause, transport, table, sched,
-     notifier) = build_campaign(cfg)
-    total = sum(d.bytes for d in catalog.values())
-    fix_at = {}
-    day_printed = -1
-    while clock.now < cfg.max_days * DAY and not sched.done():
-        actions = sched.step(clock.now)
-        for ds_path, fixed in list(notifier.fixed.items()):
-            if not fixed and ds_path not in fix_at:
-                fix_at[ds_path] = clock.now + cfg.human_fix_days * DAY
-        for ds_path, t in list(fix_at.items()):
-            if clock.now >= t and not notifier.is_fixed(ds_path):
-                notifier.fix(ds_path)
-                print(f"[day {clock.now/DAY:5.1f}] admin fixed {ds_path}")
-        clock.advance(cfg.step_s)
-        transport.tick()
-        day = int(clock.now / DAY)
-        if day != day_printed and day % 2 == 0:
-            day_printed = day
-            if args.dashboard:
-                print(render_text(table, ["ALCF", "OLCF"], total, clock.now))
-            else:
-                from repro.core.transfer_table import Status
-                done_a = len(table.by_status(Status.SUCCEEDED, destination="ALCF"))
-                done_o = len(table.by_status(Status.SUCCEEDED, destination="OLCF"))
-                print(f"[day {day:3d}] ALCF {done_a}/{len(catalog)}  "
-                      f"OLCF {done_o}/{len(catalog)}  "
-                      f"paused={'yes' if pause.paused('ALCF', clock.now) else 'no '}"
-                      f" notifications={len(notifier.notifications)}")
-    print(f"\ncampaign finished in {clock.now/DAY:.1f} simulated days "
-          f"(floor {total/graph.sites['LLNL'].read_bw/DAY:.1f} d); "
-          f"done={sched.done()}")
+    spec = get_scenario(args.scenario)
+    print(f"# {spec.name}: {spec.description}\n")
+    world = spec.build(scale=args.scale, seed=args.seed,
+                       n_datasets=args.datasets)
+    total = sum(d.bytes for d in world.catalog.values())
+    state = {"day_printed": -1, "fixed_seen": set()}
+
+    def observer(world, now):
+        for ds, ok in world.notifier.fixed.items():
+            if ok and ds not in state["fixed_seen"]:
+                state["fixed_seen"].add(ds)
+                print(f"[day {now/DAY:5.1f}] admin fixed {ds}")
+        day = int(now / DAY)
+        if day == state["day_printed"] or day % 2:
+            return
+        state["day_printed"] = day
+        if args.dashboard:
+            print(render_text(world.table, list(world.cfg.replicas), total,
+                              now))
+            return
+        done_by = {r: len(world.table.by_status(Status.SUCCEEDED,
+                                                destination=r))
+                   for r in world.cfg.replicas}
+        paused = " ".join(
+            f"{s}:{'P' if world.pause.paused(s, now) else '-'}"
+            for s in world.graph.sites)
+        print(f"[day {day:3d}] "
+              + "  ".join(f"{r} {n}/{len(world.catalog)}"
+                          for r, n in done_by.items())
+              + f"  [{paused}]"
+              f"  notifications={len(world.notifier.notifications)}")
+
+    rep = run_world(world, engine=args.engine, on_iteration=observer)
+    print(f"\ncampaign finished in {rep.duration_days:.1f} simulated days "
+          f"(floor {rep.floor_days:.1f} d); done={world.sched.done()}")
 
 
 if __name__ == "__main__":

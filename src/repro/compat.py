@@ -1,0 +1,31 @@
+"""Version compatibility shims for the host framework.
+
+The repo targets the modern ``jax.shard_map`` entry point (with its
+``check_vma`` keyword); older jax releases ship the same functionality as
+``jax.experimental.shard_map.shard_map`` with ``check_rep``.  ``shard_map``
+below papers over the difference so library and test code can use one
+spelling everywhere.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """Dispatch to ``jax.shard_map`` or the legacy experimental API.
+
+    ``check`` maps to ``check_vma`` (new) / ``check_rep`` (old); both default
+    off because the relay collectives intentionally hold different values per
+    slice mid-chain.
+    """
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        try:
+            return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=check)
+        except TypeError:
+            return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_rep=check)
+    from jax.experimental.shard_map import shard_map as legacy
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)

@@ -60,9 +60,20 @@ class CampaignReport:
     quarantined: int
 
 
-def build_campaign(cfg: CampaignConfig):
-    """Wire up catalog, sites, calendar, transport, table, scheduler."""
-    graph = paper_route_graph()
+def build_campaign(cfg: CampaignConfig, *,
+                   graph: Optional[RouteGraph] = None,
+                   pause: Optional[PauseManager] = None,
+                   injector: Optional[FaultInjector] = None,
+                   retry: Optional[RetryPolicy] = None,
+                   max_active_per_route: int = 2):
+    """Wire up catalog, sites, calendar, transport, table, scheduler.
+
+    The keyword overrides let a ``repro.scenarios.spec.ScenarioSpec`` compile
+    its own topology, maintenance calendar, and fault profile onto the same
+    wiring; with no overrides this reproduces the paper's 2022 campaign.
+    """
+    if graph is None:
+        graph = paper_route_graph()
     raw = make_catalog(
         n_datasets=cfg.n_datasets,
         total_bytes=int(cfg.total_bytes * cfg.scale),
@@ -82,60 +93,56 @@ def build_campaign(cfg: CampaignConfig):
         catalog[p].unreadable = True
 
     clock = SimClock(0.0)
-    pause = PauseManager()
-    # OLCF offline until its DTN comes up (phase 1)
-    pause.add_window("OLCF", 0.0, cfg.olcf_online_day * DAY, planned=False)
-    # phase 2: the first ALCF maintenance was an extended multi-day window
-    # (paper Feb 20-25), then a weekly occurrence
-    pause.add_window("ALCF", cfg.alcf_weekly_maint_day * DAY,
-                     (cfg.alcf_weekly_maint_day + 5) * DAY)
-    pause.add_weekly("ALCF", (cfg.alcf_weekly_maint_day + 12) * DAY,
-                     cfg.alcf_maint_hours * 3600.0, cfg.max_days * DAY)
-    # occasional OLCF maintenance
-    pause.add_weekly("OLCF", 40 * DAY, 12 * 3600.0, cfg.max_days * DAY)
+    if pause is None:
+        pause = PauseManager()
+        # OLCF offline until its DTN comes up (phase 1)
+        pause.add_window("OLCF", 0.0, cfg.olcf_online_day * DAY, planned=False)
+        # phase 2: the first ALCF maintenance was an extended multi-day window
+        # (paper Feb 20-25), then a weekly occurrence
+        pause.add_window("ALCF", cfg.alcf_weekly_maint_day * DAY,
+                         (cfg.alcf_weekly_maint_day + 5) * DAY)
+        pause.add_weekly("ALCF", (cfg.alcf_weekly_maint_day + 12) * DAY,
+                         cfg.alcf_maint_hours * 3600.0, cfg.max_days * DAY)
+        # occasional OLCF maintenance
+        pause.add_weekly("OLCF", 40 * DAY, 12 * 3600.0, cfg.max_days * DAY)
 
-    injector = FaultInjector(seed=cfg.seed)
+    if injector is None:
+        injector = FaultInjector(seed=cfg.seed)
     notifier = Notifier()
-    retry = RetryPolicy(max_retries=8, backoff_s=3600.0)
+    if retry is None:
+        retry = RetryPolicy(max_retries=8, backoff_s=3600.0)
     transport = SimulatedTransport(graph, clock, pause, injector, notifier, retry)
     table = TransferTable()
     sched = ReplicationScheduler(
         table, transport, catalog,
-        ReplicationPolicy(cfg.source, cfg.replicas), retry, notifier)
+        ReplicationPolicy(cfg.source, cfg.replicas, max_active_per_route),
+        retry, notifier)
     sched.populate()
     return graph, catalog, clock, pause, transport, table, sched, notifier
 
 
-def run_campaign(cfg: CampaignConfig, verbose: bool = False) -> CampaignReport:
-    (graph, catalog, clock, pause, transport, table, sched,
-     notifier) = build_campaign(cfg)
+def apply_human_fixes(notifier: Notifier, fix_at: Dict[str, float],
+                      now: float, human_fix_days: float) -> None:
+    """Human-in-the-loop: permission fixes land ``human_fix_days`` after
+    notification (paper phase 4→5).  ``fix_at`` is the caller's pending-fix
+    schedule, mutated in place; shared by the step and event drivers."""
+    for ds_path, fixed in list(notifier.fixed.items()):
+        if not fixed and ds_path not in fix_at:
+            fix_at[ds_path] = now + human_fix_days * DAY
+    for ds_path, t in list(fix_at.items()):
+        if now >= t and not notifier.is_fixed(ds_path):
+            notifier.fix(ds_path)
+
+
+def aggregate_report(cfg: CampaignConfig, graph: RouteGraph,
+                     catalog: Dict[str, Dataset], clock: SimClock,
+                     table: TransferTable, notifier: Notifier,
+                     timeline: List[Tuple[float, Dict[str, int]]]
+                     ) -> CampaignReport:
+    """Campaign statistics from a finished (or timed-out) table — per-route
+    achieved rates over *active* time only (Table 3 semantics), the Fig. 6
+    fault histogram, and final per-replica byte counts."""
     total = sum(d.bytes for d in catalog.values())
-    floor_days = total / graph.sites[cfg.source].read_bw / DAY
-
-    timeline: List[Tuple[float, Dict[str, int]]] = []
-    fix_at: Dict[str, float] = {}
-    while clock.now < cfg.max_days * DAY:
-        sched.step(clock.now)
-        # human-in-the-loop: permission fixes land ``human_fix_days`` after
-        # notification (paper phase 4→5)
-        for msg in notifier.notifications:
-            pass
-        for ds_path, fixed in list(notifier.fixed.items()):
-            if not fixed and ds_path not in fix_at:
-                fix_at[ds_path] = clock.now + cfg.human_fix_days * DAY
-        for ds_path, t in list(fix_at.items()):
-            if clock.now >= t and not notifier.is_fixed(ds_path):
-                notifier.fix(ds_path)
-        clock.advance(cfg.step_s)
-        transport.tick()
-        if int(clock.now) % int(DAY) < cfg.step_s:
-            snap = {r: _bytes_at(table, r) for r in cfg.replicas}
-            timeline.append((clock.now / DAY, snap))
-        if sched.done():
-            break
-
-    # ---- aggregate statistics ----------------------------------------------
-    # per-transfer achieved rates (active time only — Table 3 semantics)
     per_route_rates: Dict[Tuple[str, str], list] = {}
     per_route_n: Dict[Tuple[str, str], int] = {}
     faults = []
@@ -154,7 +161,7 @@ def run_campaign(cfg: CampaignConfig, verbose: bool = False) -> CampaignReport:
         hist[f] = hist.get(f, 0) + 1
     return CampaignReport(
         duration_days=clock.now / DAY,
-        floor_days=floor_days,
+        floor_days=total / graph.sites[cfg.source].read_bw / DAY,
         total_bytes=total,
         bytes_at={r: _bytes_at(table, r) for r in cfg.replicas},
         per_route_gbps=per_route_gbps,
@@ -167,6 +174,25 @@ def run_campaign(cfg: CampaignConfig, verbose: bool = False) -> CampaignReport:
         notifications=list(notifier.notifications),
         quarantined=table.count_status(Status.QUARANTINED),
     )
+
+
+def run_campaign(cfg: CampaignConfig, verbose: bool = False) -> CampaignReport:
+    (graph, catalog, clock, pause, transport, table, sched,
+     notifier) = build_campaign(cfg)
+    timeline: List[Tuple[float, Dict[str, int]]] = []
+    fix_at: Dict[str, float] = {}
+    while clock.now < cfg.max_days * DAY:
+        sched.step(clock.now)
+        apply_human_fixes(notifier, fix_at, clock.now, cfg.human_fix_days)
+        clock.advance(cfg.step_s)
+        transport.tick()
+        if int(clock.now) % int(DAY) < cfg.step_s:
+            snap = {r: _bytes_at(table, r) for r in cfg.replicas}
+            timeline.append((clock.now / DAY, snap))
+        if sched.done():
+            break
+    return aggregate_report(cfg, graph, catalog, clock, table, notifier,
+                            timeline)
 
 
 def _bytes_at(table: TransferTable, replica: str) -> int:

@@ -44,7 +44,6 @@ def snapshot(table: TransferTable, destinations: List[str],
 
 
 def _row(r: TransferRecord) -> Dict:
-    frac = ""
     return {
         "dataset": r.dataset, "from": r.source, "requested": r.requested,
         "completed": r.completed, "status": r.status.value,

@@ -29,6 +29,10 @@ class PublishFeed:
     def new_since(self, t0: float, t1: float) -> List[Dataset]:
         return [d for (t, d) in self._events if t0 < t <= t1]
 
+    def all_events(self) -> List[tuple]:
+        """Every ``(publish_time, Dataset)`` ever published."""
+        return list(self._events)
+
 
 @dataclass
 class IncrementalReplicator:

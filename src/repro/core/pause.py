@@ -30,18 +30,25 @@ class PauseManager:
             MaintenanceWindow(start, end, planned))
 
     def add_weekly(self, site: str, first_start: float, duration: float,
-                   until: float) -> None:
+                   until: float, planned: bool = True) -> None:
         t = first_start
         while t < until:
-            self.add_window(site, t, t + duration)
+            self.add_window(site, t, min(t + duration, until), planned)
             t += 7 * DAY
 
     def paused(self, site: str, now: float) -> bool:
         return any(w.start <= now < w.end for w in self._windows.get(site, ()))
 
     def next_change(self, now: float) -> float:
-        """Next time any window opens or closes (for event-driven simulation)."""
-        ts = [t for ws in self._windows.values() for w in ws
+        """Next time any window opens or closes (all sites)."""
+        return min((self.next_boundary(s, now) for s in self._windows),
+                   default=float("inf"))
+
+    def next_boundary(self, site: str, now: float) -> float:
+        """Next time ``site``'s paused/unpaused state can flip: the start of a
+        future window or the end of one containing ``now``.  ``inf`` when the
+        site has no boundary after ``now``."""
+        ts = [t for w in self._windows.get(site, ())
               for t in (w.start, w.end) if t > now]
         return min(ts) if ts else float("inf")
 

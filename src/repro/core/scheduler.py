@@ -78,6 +78,7 @@ class ReplicationScheduler:
 
     # ----------------------------------------------------------------- 2b poll
     def _poll(self, now: float, actions: List[str]) -> None:
+        updates: List[Tuple[str, str, dict]] = []
         for rec in self.table.by_status(Status.ACTIVE, Status.QUEUED, Status.PAUSED):
             st = self.transport.poll(rec.uuid)
             upd = dict(bytes_transferred=st.bytes_done, files=st.files_done,
@@ -102,7 +103,9 @@ class ReplicationScheduler:
                                    f"-> {rec.destination}: {st.detail}")
             else:
                 upd.update(status=st.status)
-            self.table.update(rec.dataset, rec.destination, **upd)
+            updates.append((rec.dataset, rec.destination, upd))
+        # one transaction for the whole poll pass, not one commit per live row
+        self.table.update_many(updates)
 
     # ------------------------------------------------------------ route starts
     def _slots(self, src: str, dst: str) -> int:
@@ -167,3 +170,10 @@ class ReplicationScheduler:
     # ---------------------------------------------------------------- helpers
     def _any_paused(self, dst: str) -> bool:
         return len(self.table.by_status(Status.PAUSED, destination=dst)) > 0
+
+    # ------------------------------------------------------- next-event hints
+    def next_backoff_expiry(self, now: float) -> float:
+        """Earliest future retry-backoff expiry (event-driven simulation
+        hint); ``inf`` when no failed transfer is waiting out a backoff."""
+        ts = [t for t in self._backoff_until.values() if t > now]
+        return min(ts) if ts else float("inf")

@@ -124,6 +124,28 @@ class TransferTable:
                 (*kw.values(), dataset, destination))
             self._conn.commit()
 
+    def update_many(
+            self, updates: Sequence[Tuple[str, str, dict]]) -> None:
+        """Apply many ``(dataset, destination, columns)`` updates in ONE
+        transaction.  Rows sharing a column set go through ``executemany``;
+        the scheduler's per-step poll uses this instead of committing once
+        per live row."""
+        if not updates:
+            return
+        groups: dict = {}
+        for dataset, destination, kw in updates:
+            kw = dict(kw)
+            if isinstance(kw.get("status"), Status):
+                kw["status"] = kw["status"].value
+            groups.setdefault(tuple(kw), []).append(
+                (*kw.values(), dataset, destination))
+        with self._lock:
+            for cols, rows in groups.items():
+                self._conn.executemany(
+                    "UPDATE transfer SET %s WHERE dataset=? AND destination=?"
+                    % ", ".join(f"{c}=?" for c in cols), rows)
+            self._conn.commit()
+
     # ---------------------------------------------------------------- queries
     def get(self, dataset: str, destination: str) -> Optional[TransferRecord]:
         rows = self._select(

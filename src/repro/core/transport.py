@@ -34,6 +34,10 @@ class SimClock:
         self.now += dt
 
 
+# fraction of a dataset transferred before its unreadable files are reached
+UNREADABLE_HALT_FRACTION = 0.25
+
+
 @dataclass
 class TransferState:
     status: Status
@@ -165,31 +169,30 @@ class SimulatedTransport(Transport):
             r = (x.source, x.destination)
             active_by_route[r] = active_by_route.get(r, 0) + 1
         for x in movers:
-            if x.stall_left > 0:
-                consumed = min(x.stall_left, dt)
-                x.stall_left -= consumed
-                if x.stall_left > 0:
-                    continue
-                eff_dt = dt - consumed
-            else:
-                eff_dt = dt
             rate = self.graph.effective_rate(x.source, x.destination,
                                              active_by_route)
-            moved = rate * eff_dt
-            # clamp to completion: a transfer finishing mid-tick only accrues
-            # the active time it actually needed (otherwise tick quantization
-            # dilutes recorded rates)
-            if rate > 0 and x.bytes_done + moved > x.dataset.bytes:
-                eff_dt = max(0.0, (x.dataset.bytes - x.bytes_done) / rate)
-                moved = x.dataset.bytes - x.bytes_done
-            x.active_s += eff_dt
-            new_done = x.bytes_done + moved
-            # persistent unreadable files halt the transfer AT the point the
-            # bad files are reached (clamped so fast ticks cannot race past)
-            if (x.dataset.unreadable
-                    and not self.notifier.is_fixed(x.dataset.path)
-                    and new_done > 0.25 * x.dataset.bytes):
-                x.bytes_done = 0.25 * x.dataset.bytes
+            self._advance_mover(x, dt, rate)
+
+    def _advance_mover(self, x: _SimXfer, dt: float, rate: float) -> None:
+        """Advance one moving transfer by wall time ``dt`` at fair-share
+        ``rate``, processing fault stalls, fault marks, the unreadable-file
+        halt point, and completion *in order* within the tick.  Segment-exact:
+        the result is independent of how ``dt`` is sliced, so the fixed-step
+        and event-driven drivers see identical trajectories."""
+        halt: Optional[float] = None
+        if (x.dataset.unreadable
+                and not self.notifier.is_fixed(x.dataset.path)):
+            halt = UNREADABLE_HALT_FRACTION * x.dataset.bytes
+        moved_total = 0.0
+        t = dt
+        while t > 1e-9:
+            if x.stall_left > 0:
+                used = min(x.stall_left, t)
+                x.stall_left -= used
+                t -= used
+                continue
+            if halt is not None and x.bytes_done >= halt:
+                x.bytes_done = halt
                 x.status = Status.FAILED
                 x.faults += 1
                 x.detail = FaultKind.PERMISSION.value
@@ -197,19 +200,95 @@ class SimulatedTransport(Transport):
                 self.notifier.notify(
                     f"permission failure (unreadable files) in {x.dataset.path}",
                     x.dataset.path)
-                continue
-            # transient faults at byte marks: stall + fault count
-            while x.fault_marks and x.fault_marks[0] <= new_done:
+                break
+            if rate <= 0:
+                break
+            # next byte boundary: fault mark, halt point, or completion
+            nxt = float(x.dataset.bytes)
+            if halt is not None:
+                nxt = min(nxt, halt)
+            if x.fault_marks and x.fault_marks[0] < nxt:
+                nxt = x.fault_marks[0]
+            need = max(0.0, nxt - x.bytes_done) / rate
+            if need > t:
+                x.bytes_done += rate * t
+                x.active_s += t
+                moved_total += rate * t
+                t = 0.0
+                break
+            x.bytes_done = nxt
+            x.active_s += need
+            moved_total += rate * need
+            t -= need
+            if x.fault_marks and x.fault_marks[0] <= nxt:
                 x.fault_marks.pop(0)
                 x.faults += 1
                 x.stall_left += self.retry.fault_retry_cost_s
-            x.bytes_done = new_done
-            self.flow_log.append(
-                (self.clock.now, (x.source, x.destination), moved))
-            if x.bytes_done >= x.dataset.bytes:
+                continue
+            if halt is not None and nxt >= halt:
+                continue            # halt handled at the top of the loop
+            if nxt >= x.dataset.bytes:
                 x.bytes_done = float(x.dataset.bytes)
                 x.status = Status.SUCCEEDED
                 x.completed_at = self.clock.now
+                break
+        if moved_total > 0:
+            self.flow_log.append(
+                (self.clock.now, (x.source, x.destination), moved_total))
+
+    # ------------------------------------------------------- next-event hints
+    def next_event_hint(self) -> float:
+        """Seconds until the earliest projected *state change* among live
+        transfers, assuming current fair-share rates persist: a transfer
+        completing or halting on unreadable files, or a metadata scan
+        finishing (either of which changes route/site fair shares).  Fault
+        marks and stall expiries are NOT events — ``_advance_mover`` resolves
+        them exactly within a tick — but their stall time is folded into each
+        completion estimate.  Returns ``inf`` when nothing is in flight;
+        pause-window boundaries are the caller's responsibility (see
+        ``PauseManager.next_boundary``)."""
+        now = self.clock.now
+        best = float("inf")
+        scanners_by_src: Dict[str, List[_SimXfer]] = {}
+        movers: List[_SimXfer] = []
+        for x in self._xfers.values():
+            if x.status not in (Status.ACTIVE, Status.PAUSED):
+                continue
+            if (self.pause.paused(x.source, now)
+                    or self.pause.paused(x.destination, now)):
+                continue        # state flips at a pause boundary, not here
+            if x.phase == "scan":
+                scanners_by_src.setdefault(x.source, []).append(x)
+            elif x.phase == "move":
+                movers.append(x)
+        for src, xs in scanners_by_src.items():
+            site = self.graph.sites[src]
+            rate = site.scan_files_per_s / max(1, len(xs))
+            for x in xs:
+                if x.dataset.files > site.scan_mem_limit_files:
+                    return 1.0  # OOM fires on the very next tick
+                if rate > 0:
+                    best = min(best, max(0.0, x.scan_files_left / rate))
+        active_by_route: Dict[Tuple[str, str], int] = {}
+        for x in movers:
+            r = (x.source, x.destination)
+            active_by_route[r] = active_by_route.get(r, 0) + 1
+        for x in movers:
+            rate = self.graph.effective_rate(x.source, x.destination,
+                                             active_by_route)
+            if rate <= 0:
+                continue
+            halt_active = (x.dataset.unreadable
+                           and not self.notifier.is_fixed(x.dataset.path))
+            target = (UNREADABLE_HALT_FRACTION * x.dataset.bytes
+                      if halt_active else float(x.dataset.bytes))
+            if target <= x.bytes_done:
+                return max(x.stall_left, 1.0)   # halts on the next tick
+            pending_stall = x.stall_left + self.retry.fault_retry_cost_s * sum(
+                1 for m in x.fault_marks if m < target)
+            best = min(best,
+                       pending_stall + (target - x.bytes_done) / rate)
+        return best
 
 
 # ================================================================== local FS

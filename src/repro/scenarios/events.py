@@ -1,0 +1,125 @@
+"""Event-driven simulation core: next-event time advance.
+
+The seed campaign driver ticks a fixed 1800-second step for the whole
+simulated campaign — thousands of scheduler passes where nothing changes.
+This module instead advances the clock straight to the next *event*:
+
+  * the next projected transfer completion / permission halt / scan finish
+    (``SimulatedTransport.next_event_hint``, which folds pending fault-stall
+    time into each estimate);
+  * the next maintenance-window boundary of any site
+    (``PauseManager.next_boundary``);
+  * the next retry-backoff expiry (``ReplicationScheduler.next_backoff_expiry``);
+  * the next scheduled human permission fix and the next incremental
+    publication (top-up) check.
+
+Because ``SimulatedTransport._advance_mover`` is segment-exact (the transfer
+trajectory is independent of how wall time is sliced into ticks), jumping
+between events is behavior-preserving: the paper-2022 scenario reproduces the
+step-driven duration and fault statistics within tolerance while replaying a
+77-simulated-day campaign in a few hundred iterations instead of thousands.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.campaign import (CampaignReport, _bytes_at, aggregate_report,
+                                 apply_human_fixes)
+from repro.core.pause import DAY
+
+# guards: never advance by less than MIN_STEP_S (numerical safety), never by
+# more than MAX_STEP_S (bounds drift if a hint source under-estimates)
+MIN_STEP_S = 1.0
+MAX_STEP_S = 12 * 3600.0
+
+
+@dataclass
+class EngineStats:
+    """Driver telemetry: how many scheduler/transport iterations were spent."""
+    iterations: int = 0
+    sim_days: float = 0.0
+
+
+def _next_event_dt(world, now: float, fix_at: Dict[str, float]) -> float:
+    """Seconds until the next thing that can change scheduler-visible state."""
+    cand = [world.transport.next_event_hint()]
+    cand.append(world.pause.next_change(now) - now)
+    cand.append(world.sched.next_backoff_expiry(now) - now)
+    for t in fix_at.values():
+        if t > now:
+            cand.append(t - now)
+    if world.incremental is not None:
+        for t in world.top_up_times:
+            if t > now:
+                cand.append(t - now)
+    dt = min((c for c in cand if c > 0), default=MAX_STEP_S)
+    return max(MIN_STEP_S, min(dt, MAX_STEP_S))
+
+
+def _pending_top_ups(world) -> bool:
+    """True while any published dataset has not been admitted to the catalog
+    (membership, not time comparison: the daily incremental check can lag an
+    event that lands exactly on a publication timestamp)."""
+    if world.incremental is None:
+        return False
+    return any(d.path not in world.catalog
+               for _, d in world.incremental.feed.all_events())
+
+
+def run_world(world, engine: str = "events",
+              stats: Optional[EngineStats] = None,
+              on_iteration=None) -> CampaignReport:
+    """Drive a compiled ``ScenarioWorld`` to completion.
+
+    ``engine="step"`` reproduces the seed driver (fixed ``cfg.step_s``
+    cadence); ``engine="events"`` uses next-event time advance.  Both share
+    the same transport/scheduler/human-fix code and the same aggregation.
+    ``on_iteration(world, now)``, if given, is called once per driver
+    iteration (after the scheduler pass, before the clock advances) — the
+    observer hook the interactive example uses for progress display.
+    """
+    if engine not in ("events", "step"):
+        raise ValueError(f"unknown engine {engine!r}")
+    cfg = world.cfg
+    clock, sched, transport = world.clock, world.sched, world.transport
+    timeline: List[Tuple[float, Dict[str, int]]] = []
+    fix_at: Dict[str, float] = {}
+    next_snap_day = 1.0
+    stats = stats if stats is not None else EngineStats()
+    while clock.now < cfg.max_days * DAY:
+        stats.iterations += 1
+        sched.step(clock.now)
+        apply_human_fixes(world.notifier, fix_at, clock.now,
+                          cfg.human_fix_days)
+        if world.incremental is not None:
+            world.incremental.maybe_check(clock.now)
+        if on_iteration is not None:
+            on_iteration(world, clock.now)
+        done = sched.done() and not _pending_top_ups(world)
+        if done and engine == "events":
+            break           # stop exactly at the last event's timestamp
+        dt = (cfg.step_s if engine == "step"
+              else _next_event_dt(world, clock.now, fix_at))
+        clock.advance(dt)
+        transport.tick()
+        if clock.now / DAY >= next_snap_day:
+            timeline.append((clock.now / DAY,
+                             {r: _bytes_at(world.table, r)
+                              for r in cfg.replicas}))
+            next_snap_day = float(int(clock.now / DAY) + 1)
+        if done:
+            break           # step engine: mirror the seed driver's ordering
+    stats.sim_days = clock.now / DAY
+    return aggregate_report(cfg, world.graph, world.catalog, clock,
+                            world.table, world.notifier, timeline)
+
+
+def run_scenario(scenario, engine: str = "events", scale: float = 1.0,
+                 seed: int = 0, n_datasets: Optional[int] = None,
+                 stats: Optional[EngineStats] = None) -> CampaignReport:
+    """Build and run a scenario by name or ``ScenarioSpec``."""
+    from repro.scenarios.registry import get_scenario
+    spec = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    world = spec.build(scale=scale, seed=seed, n_datasets=n_datasets)
+    return run_world(world, engine=engine, stats=stats)

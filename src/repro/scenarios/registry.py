@@ -1,0 +1,167 @@
+"""Named campaign scenarios.
+
+Each entry is a complete ``ScenarioSpec``.  ``paper-2022`` reproduces the
+campaign wiring of ``repro.core.campaign.build_campaign`` exactly (same
+topology, same calendar, same fault profile); the rest are the what-if
+studies the paper's capacity-planning discussion calls for — degraded
+source, storms of transient faults, flaky networking, a fourth site, a
+mid-campaign top-up, and a cold start where relays carry almost everything.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.scenarios.spec import (FaultProfileSpec, OutageSpec, RouteSpec,
+                                  ScenarioSpec, SiteSpec, TopUpSpec)
+
+# --------------------------------------------------------------- paper sites
+_LLNL = SiteSpec("LLNL", read_gbps=1.5, write_gbps=1.5,
+                 scan_files_per_s=20_000, scan_mem_limit_files=2_000_000)
+_ALCF = SiteSpec("ALCF", read_gbps=10.0, write_gbps=10.0)
+_OLCF = SiteSpec("OLCF", read_gbps=10.0, write_gbps=10.0)
+_NERSC = SiteSpec("NERSC", read_gbps=10.0, write_gbps=10.0)
+
+_PAPER_ROUTES = (
+    RouteSpec("LLNL", "ALCF", 2 * 0.648),
+    RouteSpec("LLNL", "OLCF", 2 * 0.662),
+    RouteSpec("ALCF", "OLCF", 2 * 1.706),
+    RouteSpec("OLCF", "ALCF", 2 * 2.352),
+)
+
+# paper Fig. 5 calendar: OLCF DTN online day 5; ALCF extended maintenance
+# days 5-10 then weekly 12 h from day 17; OLCF weekly 12 h from day 40.
+_PAPER_OUTAGES = (
+    OutageSpec("OLCF", start_day=0.0, duration_h=5 * 24.0, planned=False),
+    OutageSpec("ALCF", start_day=5.0, duration_h=5 * 24.0),
+    OutageSpec("ALCF", start_day=17.0, duration_h=12.0, weekly=True),
+    OutageSpec("OLCF", start_day=40.0, duration_h=12.0, weekly=True),
+)
+
+PAPER_2022 = ScenarioSpec(
+    name="paper-2022",
+    description="The 2022 campaign as published: LLNL sources 7.3 PB to "
+                "ALCF and OLCF over Table-3 routes with the Fig.-5 "
+                "maintenance calendar and the CMIP5 permission incident.",
+    source="LLNL", replicas=("ALCF", "OLCF"),
+    sites=(_LLNL, _ALCF, _OLCF), routes=_PAPER_ROUTES,
+    outages=_PAPER_OUTAGES)
+
+FOUR_SITE_MESH = ScenarioSpec(
+    name="four-site-mesh",
+    description="A fourth LCF (NERSC) joins: three replicas on a full "
+                "inter-LCF relay mesh — does the slow source still bound "
+                "the campaign?",
+    source="LLNL", replicas=("ALCF", "OLCF", "NERSC"),
+    sites=(_LLNL, _ALCF, _OLCF, _NERSC),
+    routes=_PAPER_ROUTES + (
+        RouteSpec("LLNL", "NERSC", 2 * 0.650),
+        RouteSpec("ALCF", "NERSC", 2 * 1.800),
+        RouteSpec("NERSC", "ALCF", 2 * 1.800),
+        RouteSpec("OLCF", "NERSC", 2 * 2.000),
+        RouteSpec("NERSC", "OLCF", 2 * 2.000),
+    ),
+    outages=_PAPER_OUTAGES)
+
+DEGRADED_SOURCE = ScenarioSpec(
+    name="degraded-source",
+    description="The source file system at half health: LLNL reads at "
+                "0.75 GB/s and scans at half speed — how much does the "
+                "58-day floor stretch?",
+    source="LLNL", replicas=("ALCF", "OLCF"),
+    sites=(SiteSpec("LLNL", read_gbps=0.75, write_gbps=0.75,
+                    scan_files_per_s=10_000,
+                    scan_mem_limit_files=2_000_000),
+           _ALCF, _OLCF),
+    routes=_PAPER_ROUTES,
+    outages=_PAPER_OUTAGES,
+    max_days=400.0)
+
+FAULT_STORM = ScenarioSpec(
+    name="fault-storm",
+    description="20x the transient-fault intensity with a heavier fragility "
+                "tail: does bounded retry + quarantine still converge?",
+    source="LLNL", replicas=("ALCF", "OLCF"),
+    sites=(_LLNL, _ALCF, _OLCF), routes=_PAPER_ROUTES,
+    outages=_PAPER_OUTAGES,
+    faults=FaultProfileSpec(transient_per_tb=3.0, fragility_tail=1.8,
+                            max_retries=10, backoff_s=1800.0))
+
+FLAKY_NETWORK = ScenarioSpec(
+    name="flaky-network",
+    description="Routes at 60% of Table-3 bandwidth plus short unplanned "
+                "outages every few days at both replicas.",
+    source="LLNL", replicas=("ALCF", "OLCF"),
+    sites=(_LLNL, _ALCF, _OLCF),
+    routes=tuple(RouteSpec(r.source, r.destination, 0.6 * r.gbps)
+                 for r in _PAPER_ROUTES),
+    outages=_PAPER_OUTAGES + (
+        OutageSpec("ALCF", start_day=3.0, duration_h=3.0, weekly=True,
+                   planned=False),
+        OutageSpec("OLCF", start_day=8.5, duration_h=4.0, weekly=True,
+                   planned=False),
+        OutageSpec("ALCF", start_day=11.25, duration_h=2.0, weekly=True,
+                   planned=False),
+    ),
+    faults=FaultProfileSpec(transient_per_tb=0.6),
+    max_days=400.0)
+
+INCREMENTAL_TOP_UP = ScenarioSpec(
+    name="incremental-top-up",
+    description="New ESGF publications land mid-campaign (paper C7): the "
+                "daily incremental check folds them into the same table "
+                "and the campaign absorbs them.",
+    source="LLNL", replicas=("ALCF", "OLCF"),
+    sites=(_LLNL, _ALCF, _OLCF), routes=_PAPER_ROUTES,
+    outages=_PAPER_OUTAGES,
+    top_ups=(TopUpSpec(publish_day=12.0, n_datasets=6),
+             TopUpSpec(publish_day=20.0, n_datasets=4)))
+
+COLD_START_RELAY = ScenarioSpec(
+    name="cold-start-relay",
+    description="Cold start at four sites with thin source egress beyond "
+                "the primary: every replica but ALCF is fed almost "
+                "entirely by replica-to-replica relays.",
+    source="LLNL", replicas=("ALCF", "OLCF", "NERSC"),
+    sites=(_LLNL, _ALCF, _OLCF, _NERSC),
+    routes=(
+        RouteSpec("LLNL", "ALCF", 2 * 0.648),
+        # thin direct paths: usable during primary maintenance, otherwise
+        # relays dominate
+        RouteSpec("LLNL", "OLCF", 0.10),
+        RouteSpec("LLNL", "NERSC", 0.10),
+        RouteSpec("ALCF", "OLCF", 2 * 1.706),
+        RouteSpec("OLCF", "ALCF", 2 * 2.352),
+        RouteSpec("ALCF", "NERSC", 2 * 1.800),
+        RouteSpec("NERSC", "ALCF", 2 * 1.800),
+        RouteSpec("OLCF", "NERSC", 2 * 2.000),
+        RouteSpec("NERSC", "OLCF", 2 * 2.000),
+    ),
+    outages=(OutageSpec("ALCF", start_day=20.0, duration_h=12.0,
+                        weekly=True),),
+    max_days=400.0)
+
+
+_REGISTRY: Dict[str, ScenarioSpec] = {
+    s.name: s for s in (
+        PAPER_2022, FOUR_SITE_MESH, DEGRADED_SOURCE, FAULT_STORM,
+        FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY)
+}
+
+
+def list_scenarios() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+def register(spec: ScenarioSpec) -> ScenarioSpec:
+    """Add a custom scenario (tests and downstream configs)."""
+    _REGISTRY[spec.name] = spec
+    return spec

@@ -1,0 +1,92 @@
+"""Scenario CLI.
+
+    PYTHONPATH=src python -m repro.scenarios.run --scenario paper-2022 \
+        [--engine events|step] [--datasets N] [--scale S] [--seed K] \
+        [--json out.json] [--verbose]
+    PYTHONPATH=src python -m repro.scenarios.run --list
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Optional, Sequence
+
+from repro.scenarios.events import EngineStats, run_scenario
+from repro.scenarios.registry import get_scenario, list_scenarios
+
+
+def report_to_dict(rep, stats: EngineStats, wall_s: float) -> dict:
+    return {
+        "wall_s": round(wall_s, 3),
+        "engine_iterations": stats.iterations,
+        "duration_days": round(rep.duration_days, 3),
+        "floor_days": round(rep.floor_days, 3),
+        "total_tb": round(rep.total_bytes / 1024 ** 4, 3),
+        "bytes_at": {k: int(v) for k, v in rep.bytes_at.items()},
+        "complete_at_all": all(v >= rep.total_bytes * 0.999
+                               for v in rep.bytes_at.values()),
+        "per_route_gbps": {f"{a}->{b}": round(v, 3)
+                           for (a, b), v in rep.per_route_gbps.items()},
+        "per_route_transfers": {f"{a}->{b}": v
+                                for (a, b), v in rep.per_route_transfers.items()},
+        "faults_total": rep.faults_total,
+        "faults_mean": round(rep.faults_per_transfer_mean, 3),
+        "faults_max": rep.faults_per_transfer_max,
+        "fault_histogram": {str(k): v
+                            for k, v in sorted(rep.fault_histogram.items())},
+        "quarantined": rep.quarantined,
+        "notifications": len(rep.notifications),
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.scenarios.run",
+        description="Run a named replication-campaign scenario.")
+    ap.add_argument("--scenario", default=None,
+                    help="scenario name (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
+    ap.add_argument("--engine", choices=("events", "step"), default="events")
+    ap.add_argument("--datasets", type=int, default=None,
+                    help="override the catalog's dataset count")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="byte/file-count scale factor (1.0 = full 7.3 PB)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="also write the report here")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in list_scenarios():
+            spec = get_scenario(name)
+            print(f"{name:20} {spec.description}")
+        return 0
+    if not args.scenario:
+        ap.error("--scenario is required (or use --list)")
+
+    try:
+        spec = get_scenario(args.scenario)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    if args.verbose:
+        print(f"# {spec.name}: {spec.description}", file=sys.stderr)
+    stats = EngineStats()
+    t0 = time.time()
+    rep = run_scenario(spec, engine=args.engine, scale=args.scale,
+                       seed=args.seed, n_datasets=args.datasets, stats=stats)
+    out = report_to_dict(rep, stats, time.time() - t0)
+    out["scenario"] = spec.name
+    out["engine"] = args.engine
+    print(json.dumps(out, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

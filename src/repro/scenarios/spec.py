@@ -1,0 +1,213 @@
+"""Declarative scenario specifications.
+
+A ``ScenarioSpec`` is a complete, human-readable description of a replication
+campaign — site capabilities, route bandwidths, maintenance calendars, fault
+profiles, catalog shape, and incidents — in natural units (GB/s, days,
+hours).  ``build()`` compiles it onto the existing campaign wiring
+(``CampaignConfig`` + ``RouteGraph`` + ``PauseManager`` + scheduler/transport
+construction in ``repro.core.campaign.build_campaign``), so every scenario
+runs through exactly the code path the paper-2022 reproduction uses.
+
+Capacity-planning questions ("what if the source were slower?  what if
+maintenance doubled?  what if a fourth site joined?") become one-line edits
+to a spec or entries in ``repro.scenarios.registry``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.campaign import CampaignConfig, build_campaign
+from repro.core.faults import FaultInjector, RetryPolicy
+from repro.core.incremental import IncrementalReplicator, PublishFeed
+from repro.core.pause import DAY, PauseManager
+from repro.core.routes import GB, PB, Dataset, Route, RouteGraph, Site
+
+HOUR = 3600.0
+
+
+@dataclass(frozen=True)
+class SiteSpec:
+    """One storage site: aggregate read/write caps and scan behavior."""
+    name: str
+    read_gbps: float                       # GB/s (binary GB, as paper Table 3)
+    write_gbps: float
+    scan_files_per_s: float = 50_000.0
+    scan_mem_limit_files: int = 5_000_000
+
+
+@dataclass(frozen=True)
+class RouteSpec:
+    """One directed WAN route with its per-route bandwidth cap (GB/s)."""
+    source: str
+    destination: str
+    gbps: float
+
+
+@dataclass(frozen=True)
+class OutageSpec:
+    """A maintenance-calendar entry: one-off or weekly recurring."""
+    site: str
+    start_day: float
+    duration_h: float
+    weekly: bool = False
+    until_day: Optional[float] = None      # default: campaign max_days
+    planned: bool = True
+
+
+@dataclass(frozen=True)
+class FaultProfileSpec:
+    """Transient-fault intensity and the retry policy responding to it."""
+    transient_per_tb: float = 0.15
+    fragility_tail: float = 2.5
+    max_retries: int = 8
+    backoff_s: float = 3600.0
+    fault_retry_cost_s: float = 30.0
+
+
+@dataclass(frozen=True)
+class CatalogSpec:
+    """Shape of the dataset catalog (paper: 2291 paths / 7.3 PB / 29 M files)."""
+    n_datasets: int = 2291
+    total_bytes: int = int(7.3 * PB)
+    total_files: int = 28_907_532
+    unreadable_fraction: float = 0.01      # CMIP5 permission incident
+
+
+@dataclass(frozen=True)
+class TopUpSpec:
+    """Datasets published mid-campaign (paper C7, incremental replication)."""
+    publish_day: float
+    n_datasets: int
+    bytes_each: int = int(2 * GB)
+    files_each: int = 200
+
+
+@dataclass
+class ScenarioWorld:
+    """A compiled, runnable scenario: the campaign wiring plus (optionally)
+    an incremental-replication feed for mid-campaign top-ups."""
+    spec: "ScenarioSpec"
+    cfg: CampaignConfig
+    graph: RouteGraph
+    catalog: Dict[str, Dataset]
+    clock: object
+    pause: PauseManager
+    transport: object
+    table: object
+    sched: object
+    notifier: object
+    incremental: Optional[IncrementalReplicator] = None
+    top_up_times: Tuple[float, ...] = ()
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """A full declarative campaign scenario."""
+    name: str
+    description: str
+    source: str
+    replicas: Tuple[str, ...]
+    sites: Tuple[SiteSpec, ...]
+    routes: Tuple[RouteSpec, ...]
+    outages: Tuple[OutageSpec, ...] = ()
+    faults: FaultProfileSpec = FaultProfileSpec()
+    catalog: CatalogSpec = CatalogSpec()
+    top_ups: Tuple[TopUpSpec, ...] = ()
+    human_fix_days: float = 3.0
+    max_days: float = 200.0
+    step_s: float = 1800.0                 # fixed-step engine cadence
+    max_active_per_route: int = 2
+
+    # ------------------------------------------------------------- compilers
+    def to_campaign_config(self, scale: float = 1.0, seed: int = 0,
+                           n_datasets: Optional[int] = None) -> CampaignConfig:
+        return CampaignConfig(
+            n_datasets=n_datasets if n_datasets is not None
+            else self.catalog.n_datasets,
+            total_bytes=self.catalog.total_bytes,
+            total_files=self.catalog.total_files,
+            source=self.source,
+            replicas=tuple(self.replicas),
+            step_s=self.step_s,
+            max_days=self.max_days,
+            seed=seed,
+            unreadable_fraction=self.catalog.unreadable_fraction,
+            human_fix_days=self.human_fix_days,
+            scale=scale)
+
+    def build_graph(self) -> RouteGraph:
+        sites = [Site(s.name, read_bw=s.read_gbps * GB,
+                      write_bw=s.write_gbps * GB,
+                      scan_files_per_s=s.scan_files_per_s,
+                      scan_mem_limit_files=s.scan_mem_limit_files)
+                 for s in self.sites]
+        routes = [Route(r.source, r.destination, r.gbps * GB)
+                  for r in self.routes]
+        return RouteGraph(sites, routes)
+
+    def build_pause(self) -> PauseManager:
+        pause = PauseManager()
+        for o in self.outages:
+            start = o.start_day * DAY
+            if o.weekly:
+                until = (o.until_day if o.until_day is not None
+                         else self.max_days) * DAY
+                pause.add_weekly(o.site, start, o.duration_h * HOUR, until,
+                                 planned=o.planned)
+            else:
+                pause.add_window(o.site, start, start + o.duration_h * HOUR,
+                                 planned=o.planned)
+        return pause
+
+    def build_retry(self) -> RetryPolicy:
+        return RetryPolicy(max_retries=self.faults.max_retries,
+                           backoff_s=self.faults.backoff_s,
+                           fault_retry_cost_s=self.faults.fault_retry_cost_s)
+
+    def build(self, scale: float = 1.0, seed: int = 0,
+              n_datasets: Optional[int] = None) -> ScenarioWorld:
+        """Compile the spec onto the campaign wiring, ready to run under
+        either the fixed-step or the event-driven engine."""
+        cfg = self.to_campaign_config(scale=scale, seed=seed,
+                                      n_datasets=n_datasets)
+        injector = FaultInjector(seed=seed,
+                                 transient_per_tb=self.faults.transient_per_tb,
+                                 fragility_tail=self.faults.fragility_tail)
+        (graph, catalog, clock, pause, transport, table, sched,
+         notifier) = build_campaign(
+            cfg, graph=self.build_graph(), pause=self.build_pause(),
+            injector=injector, retry=self.build_retry(),
+            max_active_per_route=self.max_active_per_route)
+        world = ScenarioWorld(self, cfg, graph, catalog, clock, pause,
+                              transport, table, sched, notifier)
+        if self.top_ups:
+            feed = PublishFeed()
+            times: List[float] = []
+            for i, tu in enumerate(self.top_ups):
+                t = tu.publish_day * DAY
+                times.append(t)
+                for j in range(tu.n_datasets):
+                    feed.publish(t, Dataset(
+                        path=f"/css03_data/CMIP6/TOPUP/batch-{i}/ds-{j:04d}",
+                        bytes=int(tu.bytes_each * scale) or tu.bytes_each,
+                        files=tu.files_each,
+                        directories=max(1, tu.files_each // 10)))
+            world.incremental = IncrementalReplicator(feed, sched,
+                                                      check_interval=DAY)
+            world.top_up_times = tuple(times)
+        return world
+
+    # --------------------------------------------------------------- helpers
+    def vary(self, **changes) -> "ScenarioSpec":
+        """A copy with top-level fields replaced (sweep convenience)."""
+        return dataclasses.replace(self, **changes)
+
+    def with_catalog(self, **changes) -> "ScenarioSpec":
+        return dataclasses.replace(
+            self, catalog=dataclasses.replace(self.catalog, **changes))
+
+    def with_faults(self, **changes) -> "ScenarioSpec":
+        return dataclasses.replace(
+            self, faults=dataclasses.replace(self.faults, **changes))

@@ -1,0 +1,280 @@
+"""Scenario engine tests: spec compilation, the named-scenario registry,
+event-driven vs step-driven equivalence, pause-boundary semantics, batched
+table updates, and the sweep runner."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.campaign import CampaignConfig, run_campaign
+from repro.core.pause import DAY, PauseManager
+from repro.core.routes import GB
+from repro.core.transfer_table import Status, TransferTable
+from repro.scenarios.events import EngineStats, run_scenario, run_world
+from repro.scenarios.registry import get_scenario, list_scenarios
+from repro.scenarios.spec import (CatalogSpec, OutageSpec, RouteSpec,
+                                  ScenarioSpec, SiteSpec)
+
+# tiny-but-complete build overrides used to run every scenario to completion
+TINY = dict(n_datasets=8, scale=0.004)
+
+
+# ---------------------------------------------------------- pause semantics
+def test_pause_window_inclusive_start_exclusive_end():
+    pm = PauseManager()
+    pm.add_window("A", 10.0, 20.0)
+    assert not pm.paused("A", 9.999)
+    assert pm.paused("A", 10.0)          # inclusive start
+    assert pm.paused("A", 19.999)
+    assert not pm.paused("A", 20.0)      # exclusive end
+    assert not pm.paused("B", 15.0)      # other sites unaffected
+
+
+def test_pause_overlapping_windows_union():
+    pm = PauseManager()
+    pm.add_window("A", 0.0, 10.0)
+    pm.add_window("A", 5.0, 15.0)
+    for t in (0.0, 4.0, 5.0, 9.0, 12.0):
+        assert pm.paused("A", t)
+    assert not pm.paused("A", 15.0)
+    # next_boundary walks every open/close edge after `now`
+    assert pm.next_boundary("A", 0.0) == 5.0
+    assert pm.next_boundary("A", 5.0) == 10.0
+    assert pm.next_boundary("A", 10.0) == 15.0
+    assert pm.next_boundary("A", 15.0) == float("inf")
+    assert pm.next_boundary("nosuch", 0.0) == float("inf")
+
+
+def test_add_weekly_clips_last_window():
+    pm = PauseManager()
+    until = 15 * DAY
+    pm.add_weekly("A", 6 * DAY, 48.0 * 3600.0, until)   # 2-day windows
+    ws = pm.windows("A")
+    assert len(ws) == 2                   # starts at day 6 and day 13
+    assert ws[0].start == 6 * DAY and ws[0].end == 8 * DAY
+    # the day-13 window would run to day 15+? no: clipped at `until`
+    assert ws[1].start == 13 * DAY and ws[1].end == until
+    assert all(w.end <= until for w in ws)
+
+
+# --------------------------------------------------------- batched updates
+def test_update_many_single_transaction_matches_update():
+    t = TransferTable()
+    t.populate(["a", "b", "c"], "LLNL", ["ALCF", "OLCF"])
+    t.update_many([
+        ("a", "ALCF", dict(status=Status.SUCCEEDED, bytes_transferred=7)),
+        ("b", "ALCF", dict(status=Status.FAILED, retries=2)),
+        ("c", "OLCF", dict(bytes_transferred=9, rate=1.5)),
+    ])
+    assert t.get("a", "ALCF").status == Status.SUCCEEDED
+    assert t.get("a", "ALCF").bytes_transferred == 7
+    assert t.get("b", "ALCF").retries == 2
+    assert t.get("c", "OLCF").rate == 1.5
+    assert t.get("c", "OLCF").status == Status.NULL     # untouched column
+    t.update_many([])                                    # no-op is fine
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_has_required_scenarios():
+    names = list_scenarios()
+    assert len(names) >= 6
+    for required in ("paper-2022", "four-site-mesh", "degraded-source",
+                     "fault-storm", "flaky-network", "incremental-top-up",
+                     "cold-start-relay"):
+        assert required in names
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+@pytest.mark.parametrize("name", sorted(list_scenarios()))
+def test_every_scenario_runs_tiny_campaign_to_completion(name):
+    spec = get_scenario(name)
+    rep = run_scenario(spec, engine="events", seed=2, **TINY)
+    assert rep.duration_days < spec.max_days
+    assert rep.duration_days > rep.floor_days
+    # every replica holds (almost) everything; quarantined rows are the only
+    # permitted shortfall and must carry a notification
+    for replica, got in rep.bytes_at.items():
+        if rep.quarantined == 0:
+            assert got >= rep.total_bytes * 0.999, replica
+    if rep.quarantined:
+        assert rep.notifications
+
+
+def test_spec_compilation_matches_paper_wiring():
+    """paper-2022 must compile to exactly the topology/calendar that
+    ``build_campaign`` hard-codes."""
+    from repro.core.campaign import build_campaign
+    from repro.core.routes import paper_route_graph
+
+    spec = get_scenario("paper-2022")
+    graph = spec.build_graph()
+    want = paper_route_graph()
+    assert set(graph.sites) == set(want.sites)
+    for name, site in want.sites.items():
+        got = graph.sites[name]
+        assert got.read_bw == site.read_bw
+        assert got.write_bw == site.write_bw
+        assert got.scan_files_per_s == site.scan_files_per_s
+        assert got.scan_mem_limit_files == site.scan_mem_limit_files
+    assert set(graph.routes) == set(want.routes)
+    for key, route in want.routes.items():
+        assert abs(graph.routes[key].bandwidth - route.bandwidth) < 1e-6
+
+    cfg = spec.to_campaign_config(scale=0.01, seed=5, n_datasets=12)
+    pause = spec.build_pause()
+    _, _, _, want_pause, _, _, _, _ = build_campaign(cfg)
+    for site in ("ALCF", "OLCF"):
+        got_w = sorted((w.start, w.end) for w in pause.windows(site))
+        want_w = sorted((w.start, w.end) for w in want_pause.windows(site))
+        assert got_w == want_w, site
+
+
+def test_four_site_mesh_relays_to_new_site():
+    rep = run_scenario("four-site-mesh", engine="events", seed=0,
+                       n_datasets=10, scale=0.004)
+    assert "NERSC" in rep.bytes_at
+    relay_in = sum(n for (src, dst), n in rep.per_route_transfers.items()
+                   if dst == "NERSC" and src != "LLNL")
+    direct_in = rep.per_route_transfers.get(("LLNL", "NERSC"), 0)
+    assert relay_in > direct_in
+
+
+def test_cold_start_relay_is_relay_dominated():
+    rep = run_scenario("cold-start-relay", engine="events", seed=1,
+                       n_datasets=10, scale=0.004)
+    relays = sum(n for (src, _), n in rep.per_route_transfers.items()
+                 if src != "LLNL")
+    direct_secondary = sum(
+        n for (src, dst), n in rep.per_route_transfers.items()
+        if src == "LLNL" and dst != "ALCF")
+    assert relays > direct_secondary
+
+
+def test_incremental_top_up_absorbs_new_datasets():
+    spec = get_scenario("incremental-top-up")
+    world = spec.build(scale=0.004, seed=0, n_datasets=8)
+    n_initial = len(world.catalog)
+    rep = run_world(world, engine="events")
+    assert len(world.catalog) > n_initial          # top-ups were folded in
+    topups = [p for p in world.catalog if "TOPUP" in p]
+    assert topups
+    for p in topups:
+        for dst in spec.replicas:
+            assert world.table.get(p, dst).status == Status.SUCCEEDED
+    # the campaign necessarily outlives the last publication
+    assert rep.duration_days * DAY > max(world.top_up_times)
+
+
+def test_degraded_source_slower_than_baseline():
+    # enough bytes (0.73 PB) that the source bandwidth, not the maintenance
+    # calendar, bounds the campaign
+    base = run_scenario("paper-2022", engine="events", seed=0,
+                        n_datasets=12, scale=0.1)
+    slow = run_scenario("degraded-source", engine="events", seed=0,
+                        n_datasets=12, scale=0.1)
+    assert slow.floor_days > base.floor_days * 1.8
+    assert slow.duration_days > base.duration_days * 1.3
+
+
+def test_fault_storm_produces_heavier_fault_load():
+    base = run_scenario("paper-2022", engine="events", seed=0,
+                        n_datasets=12, scale=0.01)
+    storm = run_scenario("fault-storm", engine="events", seed=0,
+                         n_datasets=12, scale=0.01)
+    assert storm.faults_total > 3 * max(1, base.faults_total)
+
+
+# ------------------------------------------------- event/step equivalence
+def test_event_engine_equivalent_to_step_driver():
+    """Acceptance: paper-2022 under events matches the step-driven
+    ``run_campaign`` duration within 5% and reproduces the fault-histogram
+    shape, at far fewer driver iterations."""
+    n, scale, seed = 24, 0.02, 0
+    step_rep = run_campaign(CampaignConfig(n_datasets=n, scale=scale,
+                                           seed=seed))
+    stats = EngineStats()
+    ev_rep = run_scenario("paper-2022", engine="events", scale=scale,
+                          seed=seed, n_datasets=n, stats=stats)
+    assert abs(ev_rep.duration_days - step_rep.duration_days) \
+        <= 0.05 * step_rep.duration_days
+    # completion equivalence
+    for r in ("ALCF", "OLCF"):
+        assert ev_rep.bytes_at[r] == step_rep.bytes_at[r]
+    # fault histogram shape: same zero-fault mass and heavy tail
+    def zero_frac(rep):
+        total = sum(rep.fault_histogram.values())
+        return rep.fault_histogram.get(0, 0) / max(1, total)
+    assert abs(zero_frac(ev_rep) - zero_frac(step_rep)) <= 0.2
+    if step_rep.faults_total:
+        assert 0.3 <= ev_rep.faults_total / step_rep.faults_total <= 3.0
+        assert ev_rep.faults_per_transfer_max >= \
+            ev_rep.faults_per_transfer_mean
+    # the event core must do meaningfully fewer iterations than the
+    # fixed-step driver (duration_days of 1800 s steps)
+    step_iters = step_rep.duration_days * DAY / 1800.0
+    assert stats.iterations < 0.6 * step_iters
+
+
+def test_step_engine_in_run_world_matches_run_campaign():
+    """run_world(engine='step') reproduces the seed driver on the same
+    wiring (same catalog, calendar, fault seeds)."""
+    n, scale, seed = 16, 0.01, 4
+    a = run_campaign(CampaignConfig(n_datasets=n, scale=scale, seed=seed))
+    spec = get_scenario("paper-2022")
+    b = run_world(spec.build(scale=scale, seed=seed, n_datasets=n),
+                  engine="step")
+    assert a.duration_days == pytest.approx(b.duration_days, rel=1e-9)
+    assert a.faults_total == b.faults_total
+    assert a.bytes_at == b.bytes_at
+
+
+# ------------------------------------------------------------------ sweep
+def test_sweep_aggregates_comparison_rows(tmp_path):
+    from repro.scenarios.sweep import Variant, emit_bench, sweep, to_frame
+    variants = [Variant("paper-2022", n_datasets=8, scale=0.004, seed=s)
+                for s in (0, 1)]
+    rows = sweep(variants, processes=2)
+    assert len(rows) == 2
+    assert [r["seed"] for r in rows] == [0, 1]
+    for row in rows:
+        assert row["scenario"] == "paper-2022"
+        assert row["duration_days"] > 0
+        assert row["wall_s"] >= 0
+    frame = to_frame(rows)
+    assert frame["seed"] == [0, 1]
+    assert len(frame["duration_days"]) == 2
+    out = str(tmp_path / "BENCH_scenarios.json")
+    emit_bench(rows, path=out, extra={"note": "test"})
+    emit_bench([], path=out, extra={"engine_comparison": {"speedup": 9.9}})
+    with open(out) as f:
+        doc = json.load(f)
+    assert len(doc["sweep"]) == 2                # merge preserved the rows
+    assert doc["note"] == "test"
+    assert doc["engine_comparison"]["speedup"] == 9.9
+
+
+# -------------------------------------------------------------------- CLI
+def test_scenario_cli_runs_named_scenario(tmp_path):
+    out = str(tmp_path / "report.json")
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.scenarios.run", "--scenario",
+         "paper-2022", "--datasets", "8", "--scale", "0.004",
+         "--json", out],
+        capture_output=True, text=True, timeout=300, env=env, cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    doc = json.loads(r.stdout)
+    assert doc["scenario"] == "paper-2022"
+    assert doc["complete_at_all"] or doc["quarantined"] > 0
+    assert os.path.exists(out)
+    r2 = subprocess.run(
+        [sys.executable, "-m", "repro.scenarios.run", "--list"],
+        capture_output=True, text=True, timeout=120, env=env, cwd=".")
+    assert r2.returncode == 0
+    for name in list_scenarios():
+        assert name in r2.stdout
