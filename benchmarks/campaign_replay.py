@@ -15,6 +15,13 @@ is scale-invariant because bandwidths and totals shrink together only when
 ``--compare-engines`` additionally replays the paper-2022 scenario under the
 fixed-step driver AND the event-driven core (``repro.scenarios.events``) and
 records the wall-clock speedup into ``BENCH_scenarios.json``.
+
+``--scaling`` sweeps the catalog size (default n ∈ {48, 512, 2291, 8192,
+20480} synthetic datasets) under the event engine and records
+wall-clock / iterations / events-per-second per point into
+``BENCH_scenarios.json`` — the O(active) acceptance evidence: events/s (and
+µs per iteration) must stay flat as the catalog grows.  ``--scenario
+mega-campaign`` replays the ≥20k-dataset four-site registry scenario.
 """
 from __future__ import annotations
 
@@ -23,6 +30,8 @@ import json
 import time
 
 from repro.core.campaign import CampaignConfig, run_campaign
+
+SCALING_NS = (48, 512, 2291, 8192, 20480)
 
 
 def replay(n_datasets: int = 2291, scale: float = 1.0, seed: int = 0,
@@ -90,23 +99,83 @@ def compare_engines(n_datasets: int = 48, scale: float = 1.0, seed: int = 0):
     }
 
 
+def scaling_point(n_datasets: int, scenario: str = "paper-2022",
+                  seed: int = 0, scale: float = 1.0) -> dict:
+    """One event-engine replay at catalog size ``n_datasets``, reduced to
+    the scaling metrics: wall clock, driver iterations, events/s, and the
+    per-iteration cost that must stay flat in catalog size."""
+    from repro.scenarios.events import EngineStats, run_scenario
+    stats = EngineStats()
+    t0 = time.time()
+    rep = run_scenario(scenario, engine="events", scale=scale, seed=seed,
+                       n_datasets=n_datasets, stats=stats)
+    wall = time.time() - t0
+    return {
+        "n_datasets": n_datasets,
+        "wall_s": round(wall, 3),
+        "iterations": stats.iterations,
+        "events_per_s": round(stats.iterations / max(wall, 1e-9), 1),
+        "us_per_iteration": round(1e6 * wall / max(stats.iterations, 1), 1),
+        "duration_days": round(rep.duration_days, 3),
+        "faults_total": rep.faults_total,
+        "quarantined": rep.quarantined,
+    }
+
+
+def scaling(ns=SCALING_NS, scenario: str = "paper-2022", seed: int = 0) -> dict:
+    rows = []
+    for n in ns:
+        row = scaling_point(n, scenario=scenario, seed=seed)
+        rows.append(row)
+        print(f"n={n:6d}  wall={row['wall_s']:8.2f}s  "
+              f"iters={row['iterations']:7d}  "
+              f"{row['events_per_s']:8.1f} ev/s  "
+              f"{row['us_per_iteration']:7.1f} us/iter  "
+              f"{row['duration_days']:7.2f} d")
+    return {"scenario": scenario, "seed": seed, "points": rows}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--datasets", type=int, default=2291)
     ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--scenario", default="paper-2022")
     ap.add_argument("--out", default=None)
     ap.add_argument("--compare-engines", action="store_true",
                     help="benchmark step vs event engine on paper-2022 and "
                          "record the speedup in BENCH_scenarios.json")
+    ap.add_argument("--scaling", action="store_true",
+                    help="replay --scenario at increasing catalog sizes and "
+                         "record the scaling curve in BENCH_scenarios.json")
+    ap.add_argument("--scaling-ns", default=None,
+                    help="comma-separated catalog sizes for --scaling "
+                         f"(default {','.join(map(str, SCALING_NS))})")
     ap.add_argument("--bench-out", default="BENCH_scenarios.json")
     args = ap.parse_args()
+    from repro.scenarios.sweep import emit_bench
+    if args.scaling:
+        ns = (tuple(int(s) for s in args.scaling_ns.split(","))
+              if args.scaling_ns else SCALING_NS)
+        doc = scaling(ns, scenario=args.scenario)
+        key = ("scaling" if args.scenario == "paper-2022"
+               else f"scaling_{args.scenario}")
+        emit_bench([], path=args.bench_out, extra={key: doc})
+        return
     if args.compare_engines:
         cmp = compare_engines(n_datasets=min(args.datasets, 48),
                               scale=args.scale)
-        from repro.scenarios.sweep import emit_bench
         emit_bench([], path=args.bench_out,
                    extra={"engine_comparison": cmp})
         print(json.dumps(cmp, indent=2))
+        return
+    if args.scenario != "paper-2022":
+        # non-paper scenarios replay through the event engine
+        out = scaling_point(args.datasets, scenario=args.scenario,
+                            scale=args.scale)
+        print(json.dumps(out, indent=2))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(out, f, indent=2)
         return
     out, rep = replay(args.datasets, args.scale)
     print(json.dumps(out, indent=2))

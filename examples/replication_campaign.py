@@ -18,7 +18,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.dashboard import render_text
 from repro.core.pause import DAY
-from repro.core.transfer_table import Status
 from repro.scenarios.events import run_world
 from repro.scenarios.registry import get_scenario, list_scenarios
 
@@ -54,8 +53,7 @@ def main():
             print(render_text(world.table, list(world.cfg.replicas), total,
                               now))
             return
-        done_by = {r: len(world.table.by_status(Status.SUCCEEDED,
-                                                destination=r))
+        done_by = {r: len(world.table.succeeded_set(r))
                    for r in world.cfg.replicas}
         paused = " ".join(
             f"{s}:{'P' if world.pause.paused(s, now) else '-'}"

@@ -196,5 +196,4 @@ def run_campaign(cfg: CampaignConfig, verbose: bool = False) -> CampaignReport:
 
 
 def _bytes_at(table: TransferTable, replica: str) -> int:
-    return sum(r.bytes_transferred for r in table.by_status(
-        Status.SUCCEEDED, destination=replica))
+    return table.bytes_at(replica)

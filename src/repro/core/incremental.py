@@ -33,6 +33,15 @@ class PublishFeed:
         """Every ``(publish_time, Dataset)`` ever published."""
         return list(self._events)
 
+    def count(self) -> int:
+        """Number of publications so far — an O(1) growth cursor, so pollers
+        can notice new events without copying the feed."""
+        return len(self._events)
+
+    def events_since(self, cursor: int) -> List[tuple]:
+        """Publications appended at or after position ``cursor``."""
+        return self._events[cursor:]
+
 
 @dataclass
 class IncrementalReplicator:

@@ -6,20 +6,74 @@ TPU-friendly streaming hash whose reference lives in
 ``repro.kernels.checksum.ref`` (numpy/jnp, exact uint32 arithmetic) and whose
 production implementation is the Pallas kernel in
 ``repro.kernels.checksum.checksum`` (validated bit-exact against the ref).
+
+``StreamingChecksum`` feeds the hash chunk by chunk: because the fold is an
+XOR-reduction of position-mixed words, partial folds over consecutive chunks
+combine exactly to the whole-buffer hash, so transports and manifest scans
+never need to hold a file in memory.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
-from repro.kernels.checksum.ref import checksum_bytes_np
+import numpy as np
+
+from repro.kernels.checksum.ref import (checksum_bytes_np, finalize32_np,
+                                        fold_words_np)
+
+_SCAN_CHUNK = 4 * 1024 * 1024
 
 
 def file_checksum(data: bytes) -> int:
     return checksum_bytes_np(data)
+
+
+class StreamingChecksum:
+    """Incremental ``checksum_bytes_np``: ``update()`` chunks in any split,
+    then ``digest()`` — bit-identical to hashing the concatenation whole.
+    Chunks need not be word-aligned; a ≤3-byte tail is carried between
+    updates and only the final partial word is zero-padded."""
+
+    def __init__(self):
+        self._acc = 0
+        self._nwords = 0
+        self._nbytes = 0
+        self._tail = b""
+
+    def update(self, chunk: bytes) -> "StreamingChecksum":
+        self._nbytes += len(chunk)
+        data = self._tail + chunk
+        nwords = len(data) // 4
+        if nwords:
+            words = np.frombuffer(data, dtype="<u4", count=nwords)
+            self._acc ^= fold_words_np(words, self._nwords)
+            self._nwords += nwords
+        self._tail = data[nwords * 4:]
+        return self
+
+    def digest(self) -> int:
+        acc = self._acc
+        if self._tail:
+            pad = self._tail + b"\0" * (-len(self._tail) % 4)
+            acc ^= fold_words_np(np.frombuffer(pad, dtype="<u4"), self._nwords)
+        return finalize32_np(acc, self._nbytes)
+
+
+def stream_file_checksum(path: str) -> Tuple[int, int]:
+    """(size, checksum) of a file, streamed in fixed-size chunks."""
+    s = StreamingChecksum()
+    size = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(_SCAN_CHUNK)
+            if not chunk:
+                break
+            size += len(chunk)
+            s.update(chunk)
+    return size, s.digest()
 
 
 @dataclass
@@ -34,9 +88,7 @@ class Manifest:
             for fn in sorted(files):
                 p = os.path.join(dirpath, fn)
                 rel = os.path.relpath(p, root)
-                with open(p, "rb") as f:
-                    data = f.read()
-                m.entries[rel] = (len(data), file_checksum(data))
+                m.entries[rel] = stream_file_checksum(p)
         return m
 
     def verify(self, root: str) -> Dict[str, str]:
@@ -47,11 +99,10 @@ class Manifest:
             if not os.path.exists(p):
                 problems[rel] = "missing"
                 continue
-            with open(p, "rb") as f:
-                data = f.read()
-            if len(data) != size:
-                problems[rel] = f"size {len(data)} != {size}"
-            elif file_checksum(data) != csum:
+            got_size, got_csum = stream_file_checksum(p)
+            if got_size != size:
+                problems[rel] = f"size {got_size} != {size}"
+            elif got_csum != csum:
                 problems[rel] = "checksum mismatch"
         return problems
 

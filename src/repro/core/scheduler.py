@@ -17,12 +17,29 @@ Key properties preserved from the paper:
   * FAILED rows are retried with bounded retries, then QUARANTINED with a
     notification (C3);
   * re-routing rewrites the row's *source*, never loses the row (C4).
+
+Per-step cost is O(live transfers), not O(catalog): instead of re-SELECTing
+the table every pass, the scheduler subscribes to ``TransferTable`` row
+transitions and maintains
+
+  * per-destination min-heaps of datasets startable from the source
+    (``_direct``), popped lazily in dataset order — the order the old
+    ``SELECT ... ORDER BY dataset`` produced;
+  * per-(destination, donor) heaps of relay candidates (``_relay``): a
+    dataset enters when it SUCCEEDs at some replica while still outstanding
+    elsewhere, bucketed by the donor the Figure-4 scan would pick (the
+    first succeeded replica in priority order);
+  * a retry-backoff min-heap with expired entries pruned on the way out.
+
+Heap entries are validated against the live row when popped (lazy deletion),
+so stale entries cost O(log n) once and the common-case step touches only
+rows that can actually change state.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+import heapq
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.faults import Notifier, RetryPolicy
 from repro.core.routes import Dataset, RouteGraph
@@ -39,6 +56,7 @@ class ReplicationPolicy:
 
 
 OCCUPYING = (Status.ACTIVE, Status.QUEUED, Status.PAUSED)
+_RETRYABLE_SET = frozenset(RETRYABLE)
 
 
 class ReplicationScheduler:
@@ -53,6 +71,24 @@ class ReplicationScheduler:
         self.retry = retry
         self.notifier = notifier or Notifier()
         self._backoff_until: Dict[Tuple[str, str], float] = {}
+        self._backoff_heap: List[Tuple[float, Tuple[str, str]]] = []
+        # per-destination queues of datasets startable direct from the source
+        self._direct: Dict[str, List[str]] = {}
+        self._direct_member: Dict[str, Set[str]] = {}
+        # per-(destination, donor) relay-candidate queues
+        self._relay: Dict[Tuple[str, str], List[str]] = {}
+        self._relay_donor: Dict[str, Dict[str, str]] = {}  # dst -> ds -> donor
+        # when re-admitting quarantined rows, the listener diverts their
+        # queue insertions here: Figure 4's scan considers them *after* the
+        # ordinary eligible rows of the same pass (they were appended to the
+        # SELECT result), and submit order feeds the shared fault RNG, so the
+        # placement must be preserved exactly
+        self._defer_queue: Optional[List[str]] = None
+        table.add_listener(self._on_row)
+        # adopt rows that predate this scheduler (e.g. a table re-opened from
+        # disk); normally the table is empty here and this is a no-op
+        for rec in table.all():
+            self._on_row(rec, None, None)
 
     # ------------------------------------------------------------------ setup
     def populate(self) -> int:
@@ -76,6 +112,60 @@ class ReplicationScheduler:
     def done(self) -> bool:                                       # 2f
         return self.table.done()
 
+    # ----------------------------------------------------- incremental state
+    def _on_row(self, rec: TransferRecord, old_status: Optional[Status],
+                old_source: Optional[str]) -> None:
+        """TransferTable listener: keep the pending queues current.  Heaps
+        hold dataset names; entries going stale (row started elsewhere,
+        succeeded, quarantined) are dropped lazily when popped."""
+        if rec.status in _RETRYABLE_SET:
+            if self._defer_queue is not None:
+                self._defer_queue.append(rec.dataset)
+                return
+            self._queue_row(rec)
+        elif rec.status == Status.SUCCEEDED and old_status != Status.SUCCEEDED:
+            self._on_success(rec.dataset, rec.destination)
+
+    def _queue_row(self, rec: TransferRecord) -> None:
+        """Enter a retryable row into the direct and/or relay queues."""
+        dst = rec.destination
+        if rec.source == self.policy.source:
+            member = self._direct_member.setdefault(dst, set())
+            if rec.dataset not in member:
+                member.add(rec.dataset)
+                heapq.heappush(self._direct.setdefault(dst, []), rec.dataset)
+        donor = self._first_donor(rec.dataset, dst)
+        if donor is not None:
+            self._relay_add(dst, rec.dataset, donor)
+
+    def _on_success(self, dataset: str, destination: str) -> None:
+        """A dataset just landed at ``destination``: every other replica
+        still holding a retryable row for it gains a relay candidate."""
+        for dst in self.policy.replicas:
+            if dst == destination:
+                continue
+            rec = self.table.peek(dataset, dst)
+            if rec is None or rec.status not in _RETRYABLE_SET:
+                continue
+            donor = self._first_donor(dataset, dst)
+            if donor is not None:
+                self._relay_add(dst, dataset, donor)
+
+    def _first_donor(self, dataset: str, dst: str) -> Optional[str]:
+        """The donor Figure 4's relay scan would pick: the first replica in
+        priority order (≠ dst) that already holds the dataset."""
+        for r in self.policy.replicas:
+            if r != dst and dataset in self.table.succeeded_set(r):
+                return r
+        return None
+
+    def _relay_add(self, dst: str, dataset: str, donor: str) -> None:
+        tracked = self._relay_donor.setdefault(dst, {})
+        if tracked.get(dataset) == donor:
+            return
+        tracked[dataset] = donor
+        heapq.heappush(self._relay.setdefault((dst, donor), []), dataset)
+
     # ----------------------------------------------------------------- 2b poll
     def _poll(self, now: float, actions: List[str]) -> None:
         updates: List[Tuple[str, str, dict]] = []
@@ -97,14 +187,16 @@ class ReplicationScheduler:
                     actions.append(f"QUARANTINED {rec.dataset} -> {rec.destination}")
                 else:
                     upd.update(status=Status.FAILED, retries=retries)
-                    self._backoff_until[(rec.dataset, rec.destination)] = (
-                        now + self.retry.backoff_s)
+                    self._set_backoff((rec.dataset, rec.destination),
+                                      now + self.retry.backoff_s)
                     actions.append(f"FAILED (retry {retries}) {rec.dataset} "
                                    f"-> {rec.destination}: {st.detail}")
             else:
                 upd.update(status=st.status)
             updates.append((rec.dataset, rec.destination, upd))
-        # one transaction for the whole poll pass, not one commit per live row
+        # one transaction for the whole poll pass, not one commit per live row;
+        # the table listener (_on_row) re-queues failures and registers relay
+        # candidates for completions
         self.table.update_many(updates)
 
     # ------------------------------------------------------------ route starts
@@ -112,26 +204,41 @@ class ReplicationScheduler:
         used = self.table.count_route(src, dst, *OCCUPYING)
         return max(0, self.policy.max_active_per_route - used)
 
-    def _eligible(self, dst: str, now: float,
-                  require_source: Optional[str] = None) -> List[TransferRecord]:
-        rows = self.table.by_status(*RETRYABLE, destination=dst)
-        # paper §5: quarantined transfers are re-admitted once the human has
-        # fixed the underlying problem (permissions, fs config)
-        for r in self.table.by_status(Status.QUARANTINED, destination=dst):
-            if self.notifier.is_fixed(r.dataset):
-                self.table.update(r.dataset, r.destination,
-                                  status=Status.FAILED, retries=0)
-                r.status = Status.FAILED
-                r.retries = 0
-                rows.append(r)
-        out = []
-        for r in rows:
-            if require_source is not None and r.source != require_source:
-                continue
-            if self._backoff_until.get((r.dataset, r.destination), 0.0) > now:
-                continue
-            out.append(r)
-        return out
+    def _readmit_quarantined(self, dst: str) -> List[str]:
+        """Paper §5: quarantined transfers are re-admitted once the human has
+        fixed the underlying problem (permissions, fs config).  One batched
+        transaction instead of one commit per re-admitted row.  Returns the
+        re-admitted datasets in dataset order; the listener's queue pushes
+        are deferred, because this pass must consider them *after* its
+        ordinary eligible rows (the caller re-queues whatever it does not
+        start)."""
+        updates = [(r.dataset, r.destination, dict(status=Status.FAILED,
+                                                   retries=0))
+                   for r in self.table.by_status(Status.QUARANTINED,
+                                                 destination=dst)
+                   if self.notifier.is_fixed(r.dataset)]
+        if not updates:
+            return []
+        self._defer_queue = tail = []
+        try:
+            self.table.update_many(updates)
+        finally:
+            self._defer_queue = None
+        return tail
+
+    def _backoff_active(self, key: Tuple[str, str], now: float) -> bool:
+        """True while the row is still waiting out a retry backoff; prunes
+        the entry once it has expired."""
+        t = self._backoff_until.get(key, 0.0)
+        if t > now:
+            return True
+        if t:
+            del self._backoff_until[key]
+        return False
+
+    def _set_backoff(self, key: Tuple[str, str], until: float) -> None:
+        self._backoff_until[key] = until
+        heapq.heappush(self._backoff_heap, (until, key))
 
     def _start(self, rec: TransferRecord, src: str, now: float,
                actions: List[str]) -> None:
@@ -146,34 +253,107 @@ class ReplicationScheduler:
         slots = self._slots(src, dst)
         if slots <= 0:
             return
-        for rec in self._eligible(dst, now, require_source=src)[:slots]:
-            self._start(rec, src, now, actions)
+        heap = self._direct.get(dst)
+        if heap:
+            member = self._direct_member[dst]
+            deferred: List[str] = []
+            while heap and slots > 0:
+                ds = heapq.heappop(heap)
+                rec = self.table.peek(ds, dst)
+                if (rec is None or rec.status not in _RETRYABLE_SET
+                        or rec.source != src):
+                    member.discard(ds)             # stale entry
+                    continue
+                if self._backoff_active((ds, dst), now):
+                    deferred.append(ds)            # still backing off
+                    continue
+                member.discard(ds)
+                self._start(rec, src, now, actions)
+                slots -= 1
+            for ds in deferred:
+                heapq.heappush(heap, ds)
+        # freshly re-admitted quarantined rows come after the ordinary
+        # eligibles, exactly where Figure 4's scan would see them
+        for ds in self._readmit_quarantined(dst):
+            rec = self.table.peek(ds, dst)
+            if rec is None or rec.status not in _RETRYABLE_SET:
+                continue
+            if (slots > 0 and rec.source == src
+                    and not self._backoff_active((ds, dst), now)):
+                self._start(rec, src, now, actions)
+                slots -= 1
+            else:
+                self._queue_row(rec)               # for later passes
 
     # -------------------------------------------------------------- 2d/2e relay
     def _start_relays(self, now: float, actions: List[str]) -> None:
         pol = self.policy
-        have: Dict[str, set] = {r: set(self.table.succeeded_datasets(r))
-                                for r in pol.replicas}
         for dst in pol.replicas:
-            # datasets succeeded at some other replica but still outstanding here
-            needed = self._eligible(dst, now)
-            for rec in needed:
-                donors = [r for r in pol.replicas
-                          if r != dst and rec.dataset in have[r]]
-                if not donors:
+            tracked = self._relay_donor.get(dst)
+            if tracked:
+                for donor in pol.replicas:
+                    if donor == dst:
+                        continue
+                    heap = self._relay.get((dst, donor))
+                    if not heap:
+                        continue
+                    slots = self._slots(donor, dst)
+                    deferred: List[str] = []
+                    while heap and slots > 0:
+                        ds = heapq.heappop(heap)
+                        if tracked.get(ds) != donor:
+                            continue                # migrated or dropped
+                        rec = self.table.peek(ds, dst)
+                        if rec is None or rec.status not in _RETRYABLE_SET:
+                            del tracked[ds]         # stale entry
+                            continue
+                        best = self._first_donor(ds, dst)
+                        if best != donor:           # an earlier-priority
+                            del tracked[ds]         # replica now holds it
+                            if best is not None:
+                                self._relay_add(dst, ds, best)
+                            continue
+                        if self._backoff_active((ds, dst), now):
+                            deferred.append(ds)
+                            continue
+                        del tracked[ds]
+                        self._start(rec, donor, now, actions)
+                        slots -= 1
+                    for ds in deferred:
+                        heapq.heappush(heap, ds)
+            # freshly re-admitted rows are scanned after the ordinary
+            # eligibles (Figure 4 ordering; see _start_route)
+            for ds in self._readmit_quarantined(dst):
+                rec = self.table.peek(ds, dst)
+                if rec is None or rec.status not in _RETRYABLE_SET:
                     continue
-                donor = donors[0]
-                if self._slots(donor, dst) <= 0:
-                    continue
-                self._start(rec, donor, now, actions)
+                donor = self._first_donor(ds, dst)
+                if (donor is not None and self._slots(donor, dst) > 0
+                        and not self._backoff_active((ds, dst), now)):
+                    self._start(rec, donor, now, actions)
+                else:
+                    self._queue_row(rec)            # for later passes
 
     # ---------------------------------------------------------------- helpers
     def _any_paused(self, dst: str) -> bool:
-        return len(self.table.by_status(Status.PAUSED, destination=dst)) > 0
+        return self.table.count_status(Status.PAUSED) > 0 and len(
+            self.table.by_status(Status.PAUSED, destination=dst)) > 0
 
     # ------------------------------------------------------- next-event hints
     def next_backoff_expiry(self, now: float) -> float:
         """Earliest future retry-backoff expiry (event-driven simulation
-        hint); ``inf`` when no failed transfer is waiting out a backoff."""
-        ts = [t for t in self._backoff_until.values() if t > now]
-        return min(ts) if ts else float("inf")
+        hint); ``inf`` when no failed transfer is waiting out a backoff.
+        Expired and superseded heap entries are pruned on the way out."""
+        heap = self._backoff_heap
+        while heap:
+            t, key = heap[0]
+            current = self._backoff_until.get(key)
+            if current != t:                        # superseded entry
+                heapq.heappop(heap)
+                continue
+            if t <= now:                            # expired: prune
+                heapq.heappop(heap)
+                del self._backoff_until[key]
+                continue
+            return t
+        return float("inf")

@@ -3,6 +3,15 @@
 One row per (dataset, source→destination) transfer.  The scheduler
 (`core.scheduler`) is a pure state machine over this table, exactly as the
 paper's replication tool tracked its 2×2291 transfers.
+
+sqlite stays the durable store, but every query is answered from a
+write-through in-memory row cache with status/route indexes, so the
+scheduler's per-step cost is proportional to the rows *matched* (live
+transfers), not to the catalog.  All mutations go through this class; they
+update the cache and the database inside the same lock.  Registered
+listeners observe every row transition, which lets the scheduler maintain
+its own incremental state (pending queues, relay donor sets) without
+re-scanning the table.
 """
 from __future__ import annotations
 
@@ -11,7 +20,8 @@ import enum
 import sqlite3
 import threading
 from dataclasses import dataclass
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
+                    Tuple)
 
 
 class Status(str, enum.Enum):
@@ -26,6 +36,8 @@ class Status(str, enum.Enum):
 
 TERMINAL = (Status.SUCCEEDED, Status.QUARANTINED)
 RETRYABLE = (Status.NULL, Status.FAILED)
+OUTSTANDING = (Status.NULL, Status.QUEUED, Status.ACTIVE, Status.PAUSED,
+               Status.FAILED)
 
 
 @dataclass
@@ -73,9 +85,13 @@ CREATE INDEX IF NOT EXISTS idx_route ON transfer (source, destination, status);
 
 _FIELDS = [f.name for f in dataclasses.fields(TransferRecord)]
 
+Key = Tuple[str, str]                         # (dataset, destination)
+# listener(record, old_status, old_source); old_status None == new row
+Listener = Callable[[TransferRecord, Optional[Status], Optional[str]], None]
+
 
 class TransferTable:
-    """sqlite3-backed transfer table.
+    """sqlite3-backed transfer table with a write-through row cache.
 
     Note the primary key is (dataset, destination): the *source* of a row may
     be rewritten by the scheduler when it re-routes (e.g. LLNL→OLCF relay
@@ -86,125 +102,211 @@ class TransferTable:
     def __init__(self, path: str = ":memory:"):
         self._conn = sqlite3.connect(path, check_same_thread=False)
         self._lock = threading.Lock()
+        self._rows: Dict[Key, TransferRecord] = {}
+        self._by_status: Dict[Status, Set[Key]] = {s: set() for s in Status}
+        self._route_counts: Dict[Tuple[str, str, Status], int] = {}
+        self._succeeded: Dict[str, Set[str]] = {}   # destination -> datasets
+        self._bytes_ok: Dict[str, int] = {}         # destination -> bytes
+        self._listeners: List[Listener] = []
         with self._lock:
             self._conn.executescript(_SCHEMA)
             self._conn.commit()
+            for rec in self._select_db("", ()):     # resume from a disk store
+                self._index_insert(rec)
+
+    def add_listener(self, fn: Listener) -> None:
+        """Observe every row mutation: ``fn(record, old_status, old_source)``
+        is called after the cache/database update (``old_status is None`` for
+        newly inserted rows).  The record passed is the live cached row —
+        treat it as read-only."""
+        self._listeners.append(fn)
 
     # ------------------------------------------------------------------ CRUD
     def populate(self, datasets: Iterable[str], source: str,
                  destinations: Sequence[str]) -> int:
         """Step 1 of Figure 4: two rows per path, status NULL."""
         n = 0
+        fresh: List[TransferRecord] = []
         with self._lock:
             for ds in datasets:
                 for dst in destinations:
+                    n += 1
+                    if (ds, dst) in self._rows:     # INSERT OR IGNORE
+                        continue
                     self._conn.execute(
                         "INSERT OR IGNORE INTO transfer "
                         "(dataset, source, destination, status) VALUES (?,?,?,?)",
                         (ds, source, dst, Status.NULL.value))
-                    n += 1
+                    rec = TransferRecord(ds, source, dst)
+                    self._index_insert(rec)
+                    fresh.append(rec)
             self._conn.commit()
+        for rec in fresh:
+            self._notify(rec, None, None)
         return n
 
     def upsert(self, rec: TransferRecord) -> None:
+        key = (rec.dataset, rec.destination)
         with self._lock:
             self._conn.execute(
                 "INSERT OR REPLACE INTO transfer "
                 f"({','.join(_FIELDS)}) VALUES ({','.join('?' * len(_FIELDS))})",
                 self._row(rec))
             self._conn.commit()
+            old = self._rows.get(key)
+            old_status = old.status if old else None
+            old_source = old.source if old else None
+            if old is not None:
+                self._index_remove(old)
+            rec = dataclasses.replace(rec)
+            self._index_insert(rec)
+        self._notify(rec, old_status, old_source)
 
     def update(self, dataset: str, destination: str, **kw) -> None:
-        if "status" in kw and isinstance(kw["status"], Status):
-            kw["status"] = kw["status"].value
-        cols = ", ".join(f"{k}=?" for k in kw)
-        with self._lock:
-            self._conn.execute(
-                f"UPDATE transfer SET {cols} WHERE dataset=? AND destination=?",
-                (*kw.values(), dataset, destination))
-            self._conn.commit()
+        self.update_many([(dataset, destination, kw)])
 
     def update_many(
             self, updates: Sequence[Tuple[str, str, dict]]) -> None:
         """Apply many ``(dataset, destination, columns)`` updates in ONE
         transaction.  Rows sharing a column set go through ``executemany``;
-        the scheduler's per-step poll uses this instead of committing once
-        per live row."""
+        the scheduler's per-step poll and quarantine re-admission use this
+        instead of committing once per row."""
         if not updates:
             return
         groups: dict = {}
-        for dataset, destination, kw in updates:
-            kw = dict(kw)
-            if isinstance(kw.get("status"), Status):
-                kw["status"] = kw["status"].value
-            groups.setdefault(tuple(kw), []).append(
-                (*kw.values(), dataset, destination))
+        events: List[Tuple[TransferRecord, Optional[Status], Optional[str]]] = []
         with self._lock:
+            for dataset, destination, kw in updates:
+                kw = dict(kw)
+                if isinstance(kw.get("status"), Status):
+                    kw["status"] = kw["status"].value
+                groups.setdefault(tuple(kw), []).append(
+                    (*kw.values(), dataset, destination))
+                rec = self._rows.get((dataset, destination))
+                if rec is None:
+                    continue                         # UPDATE matches no row
+                old_status, old_source = rec.status, rec.source
+                self._index_remove(rec)
+                for k, v in kw.items():
+                    setattr(rec, k, Status(v) if k == "status" else v)
+                self._index_insert(rec)
+                events.append((rec, old_status, old_source))
             for cols, rows in groups.items():
                 self._conn.executemany(
                     "UPDATE transfer SET %s WHERE dataset=? AND destination=?"
                     % ", ".join(f"{c}=?" for c in cols), rows)
             self._conn.commit()
+        for rec, old_status, old_source in events:
+            self._notify(rec, old_status, old_source)
 
     # ---------------------------------------------------------------- queries
     def get(self, dataset: str, destination: str) -> Optional[TransferRecord]:
-        rows = self._select(
-            "WHERE dataset=? AND destination=?", (dataset, destination))
-        return rows[0] if rows else None
+        with self._lock:
+            rec = self._rows.get((dataset, destination))
+            return dataclasses.replace(rec) if rec is not None else None
+
+    def peek(self, dataset: str, destination: str) -> Optional[TransferRecord]:
+        """The live cached row (no copy) — read-only, O(1).  The scheduler's
+        hot path uses this instead of ``get`` to avoid per-step allocation."""
+        return self._rows.get((dataset, destination))
 
     def by_status(self, *statuses: Status, destination: Optional[str] = None,
                   source: Optional[str] = None, limit: int = 0
                   ) -> List[TransferRecord]:
-        q = "WHERE status IN (%s)" % ",".join("?" * len(statuses))
-        args: list = [s.value for s in statuses]
-        if destination is not None:
-            q += " AND destination=?"
-            args.append(destination)
-        if source is not None:
-            q += " AND source=?"
-            args.append(source)
-        q += " ORDER BY dataset"
-        if limit:
-            q += f" LIMIT {int(limit)}"
-        return self._select(q, tuple(args))
+        """Matching rows in dataset order.  Served from the status index:
+        cost is O(matched · log matched), independent of table size."""
+        with self._lock:
+            keys: List[Key] = []
+            for s in statuses:
+                bucket = self._by_status.get(s, ())
+                if destination is not None:
+                    keys.extend(k for k in bucket if k[1] == destination)
+                else:
+                    keys.extend(bucket)
+            keys.sort()
+            out = []
+            for k in keys:
+                rec = self._rows[k]
+                if source is not None and rec.source != source:
+                    continue
+                out.append(dataclasses.replace(rec))
+                if limit and len(out) >= limit:
+                    break
+            return out
 
     def count_route(self, source: str, destination: str, *statuses: Status) -> int:
         with self._lock:
-            cur = self._conn.execute(
-                "SELECT COUNT(*) FROM transfer WHERE source=? AND destination=? "
-                "AND status IN (%s)" % ",".join("?" * len(statuses)),
-                (source, destination, *[s.value for s in statuses]))
-            return cur.fetchone()[0]
+            return sum(self._route_counts.get((source, destination, s), 0)
+                       for s in statuses)
 
     def count_status(self, *statuses: Status) -> int:
         with self._lock:
-            cur = self._conn.execute(
-                "SELECT COUNT(*) FROM transfer WHERE status IN (%s)"
-                % ",".join("?" * len(statuses)),
-                tuple(s.value for s in statuses))
-            return cur.fetchone()[0]
+            return sum(len(self._by_status.get(s, ())) for s in statuses)
 
     def succeeded_datasets(self, destination: str) -> List[str]:
         with self._lock:
-            cur = self._conn.execute(
-                "SELECT dataset FROM transfer WHERE destination=? AND status=?",
-                (destination, Status.SUCCEEDED.value))
-            return [r[0] for r in cur.fetchall()]
+            return list(self._succeeded.get(destination, ()))
+
+    def succeeded_set(self, destination: str) -> Set[str]:
+        """Live set of datasets SUCCEEDED at ``destination`` (read-only view,
+        O(1)); the scheduler's relay planner keys off this."""
+        return self._succeeded.setdefault(destination, set())
+
+    def bytes_at(self, destination: str) -> int:
+        """Total bytes_transferred over SUCCEEDED rows at ``destination``,
+        maintained incrementally (O(1) — the per-day timeline snapshot and
+        dashboards poll this every iteration)."""
+        with self._lock:
+            return self._bytes_ok.get(destination, 0)
 
     def all(self) -> List[TransferRecord]:
-        return self._select("", ())
+        with self._lock:
+            return [dataclasses.replace(self._rows[k])
+                    for k in sorted(self._rows)]
 
     def done(self) -> bool:
-        """Figure 4 step 2f: terminate when nothing is outstanding."""
-        return self.count_status(Status.NULL, Status.QUEUED, Status.ACTIVE,
-                                 Status.PAUSED, Status.FAILED) == 0
+        """Figure 4 step 2f: terminate when nothing is outstanding.  O(1)."""
+        with self._lock:
+            return all(not self._by_status[s] for s in OUTSTANDING)
+
+    # ------------------------------------------------------ cache maintenance
+    def _index_insert(self, rec: TransferRecord) -> None:
+        key = (rec.dataset, rec.destination)
+        self._rows[key] = rec
+        self._by_status[rec.status].add(key)
+        rkey = (rec.source, rec.destination, rec.status)
+        self._route_counts[rkey] = self._route_counts.get(rkey, 0) + 1
+        if rec.status == Status.SUCCEEDED:
+            self._succeeded.setdefault(rec.destination, set()).add(rec.dataset)
+            self._bytes_ok[rec.destination] = (
+                self._bytes_ok.get(rec.destination, 0) + rec.bytes_transferred)
+
+    def _index_remove(self, rec: TransferRecord) -> None:
+        key = (rec.dataset, rec.destination)
+        self._by_status[rec.status].discard(key)
+        rkey = (rec.source, rec.destination, rec.status)
+        n = self._route_counts.get(rkey, 0) - 1
+        if n > 0:
+            self._route_counts[rkey] = n
+        else:
+            self._route_counts.pop(rkey, None)
+        if rec.status == Status.SUCCEEDED:
+            self._succeeded.get(rec.destination, set()).discard(rec.dataset)
+            self._bytes_ok[rec.destination] = (
+                self._bytes_ok.get(rec.destination, 0) - rec.bytes_transferred)
+
+    def _notify(self, rec: TransferRecord, old_status: Optional[Status],
+                old_source: Optional[str]) -> None:
+        for fn in self._listeners:
+            fn(rec, old_status, old_source)
 
     # ---------------------------------------------------------------- helpers
-    def _select(self, where: str, args: tuple) -> List[TransferRecord]:
-        with self._lock:
-            cur = self._conn.execute(
-                f"SELECT {','.join(_FIELDS)} FROM transfer {where}", args)
-            rows = cur.fetchall()
+    def _select_db(self, where: str, args: tuple) -> List[TransferRecord]:
+        """Read rows straight from sqlite (cache bootstrap + consistency
+        tests)."""
+        cur = self._conn.execute(
+            f"SELECT {','.join(_FIELDS)} FROM transfer {where}", args)
+        rows = cur.fetchall()
         out = []
         for r in rows:
             d = dict(zip(_FIELDS, r))

@@ -6,22 +6,34 @@ concurrent transfers, a metadata *scan* phase preceding data movement (Globus
 scans source directories to size the transfer), transient fault stalls,
 persistent permission failures, and PAUSED semantics during maintenance.
 
+The hot path is O(live transfers), not O(everything ever submitted): terminal
+transfers are evicted from the live pool into a compact archive of final
+``TransferState``s the moment they finish, so ``tick()`` / ``poll()`` /
+``next_event_hint()`` never touch finished work.  Within a tick the live
+movers advance through a structure-of-arrays NumPy pool: fair-share rates,
+stall consumption, and the advance-to-next-byte-boundary test are batched
+array ops, and only movers that actually cross a boundary (fault mark, halt
+point, completion) fall back to the segment-exact scalar walk — so the
+vectorized trajectory is bit-identical to the scalar one.
+
 ``LocalFSTransport`` — real file movement between site directories on the
 local filesystem with checksum verification and retransmission of corrupted
-files; used by checkpoint replication and the end-to-end examples.
+files; used by checkpoint replication and the end-to-end examples.  Files
+stream through in fixed-size chunks with incremental checksumming — nothing
+is ever ``read()`` whole into memory.
 """
 from __future__ import annotations
 
 import abc
-import dataclasses
 import os
-import shutil
 import uuid as uuidlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.faults import (FaultInjector, FaultKind, Notifier, RetryPolicy)
-from repro.core.pause import PauseManager
+from repro.core.pause import DAY, PauseManager
 from repro.core.routes import Dataset, RouteGraph
 from repro.core.transfer_table import Status
 
@@ -83,17 +95,27 @@ class SimulatedTransport(Transport):
     def __init__(self, graph: RouteGraph, clock: SimClock,
                  pause: PauseManager, injector: FaultInjector,
                  notifier: Notifier,
-                 retry: RetryPolicy = RetryPolicy()):
+                 retry: RetryPolicy = RetryPolicy(),
+                 vectorized: bool = True):
         self.graph = graph
         self.clock = clock
         self.pause = pause
         self.injector = injector
         self.notifier = notifier
         self.retry = retry
-        self._xfers: Dict[str, _SimXfer] = {}
+        self.vectorized = vectorized
+        self._live: Dict[str, _SimXfer] = {}
+        # terminal transfers: uid -> final TransferState, evicted from the
+        # live pool so per-tick cost never grows with campaign history
+        self._archive: Dict[str, TransferState] = {}
         self._last_tick = clock.now
-        # telemetry: (time, route, bytes_moved_this_tick)
-        self.flow_log: List[Tuple[float, Tuple[str, str], float]] = []
+        # telemetry, bounded: per-(day, route) byte totals instead of one
+        # tuple per mover per tick
+        self.flow_totals: Dict[Tuple[int, Tuple[str, str]], float] = {}
+
+    @property
+    def live_count(self) -> int:
+        return len(self._live)
 
     # ----------------------------------------------------------------- submit
     def submit(self, dataset: Dataset, source: str, destination: str) -> str:
@@ -106,11 +128,17 @@ class SimulatedTransport(Transport):
             rng = self.injector.rng
             x.fault_marks = sorted(
                 float(b) for b in rng.uniform(0, dataset.bytes, n_faults))
-        self._xfers[uid] = x
+        self._live[uid] = x
         return uid
 
     def poll(self, uid: str) -> TransferState:
-        x = self._xfers[uid]
+        done = self._archive.get(uid)
+        if done is not None:
+            return done
+        return self._state_of(self._live[uid])
+
+    @staticmethod
+    def _state_of(x: _SimXfer) -> TransferState:
         # rate over *active* time (paper Table 3 reports achieved per-transfer
         # rates; PAUSED maintenance windows and metadata scans don't count)
         dur = max(1e-9, x.active_s)
@@ -124,27 +152,56 @@ class SimulatedTransport(Transport):
             rate=x.bytes_done / dur,
             detail=x.detail)
 
+    def _log_flow(self, route: Tuple[str, str], nbytes: float) -> None:
+        key = (int(self.clock.now // DAY), route)
+        self.flow_totals[key] = self.flow_totals.get(key, 0.0) + nbytes
+
+    def _pause_memo(self, now: float) -> Callable[[str], bool]:
+        """Per-tick memoized site-pause lookup (two sites per transfer, but
+        only a handful of distinct sites)."""
+        memo: Dict[str, bool] = {}
+
+        def paused(site: str) -> bool:
+            p = memo.get(site)
+            if p is None:
+                p = memo[site] = self.pause.paused(site, now)
+            return p
+
+        return paused
+
+    def _route_rates(self, movers: List[_SimXfer]) -> Dict[Tuple[str, str], float]:
+        """Fair-share rate per route for the current mover population —
+        computed once per route, shared by the tick advance and the
+        next-event hints so the two can never diverge."""
+        active_by_route: Dict[Tuple[str, str], int] = {}
+        for x in movers:
+            r = (x.source, x.destination)
+            active_by_route[r] = active_by_route.get(r, 0) + 1
+        return {r: self.graph.effective_rate(r[0], r[1], active_by_route)
+                for r in active_by_route}
+
     # ------------------------------------------------------------------- tick
     def tick(self) -> None:
-        """Advance all transfers by (clock.now - last_tick)."""
+        """Advance all live transfers by (clock.now - last_tick)."""
         dt = self.clock.now - self._last_tick
         self._last_tick = self.clock.now
         if dt <= 0:
             return
-        live = [x for x in self._xfers.values()
-                if x.status in (Status.ACTIVE, Status.PAUSED)]
-        # pause state first
-        for x in live:
-            paused = (self.pause.paused(x.source, self.clock.now)
-                      or self.pause.paused(x.destination, self.clock.now))
-            x.status = Status.PAUSED if paused else Status.ACTIVE
-        movers = [x for x in live if x.status == Status.ACTIVE and x.phase == "move"]
-        scanners = [x for x in live if x.status == Status.ACTIVE and x.phase == "scan"]
+        now = self.clock.now
+        paused = self._pause_memo(now)
+        movers: List[_SimXfer] = []
+        by_src: Dict[str, List[_SimXfer]] = {}
+        for x in self._live.values():
+            if paused(x.source) or paused(x.destination):
+                x.status = Status.PAUSED
+                continue
+            x.status = Status.ACTIVE
+            if x.phase == "move":
+                movers.append(x)
+            else:
+                by_src.setdefault(x.source, []).append(x)
 
         # --- metadata scans (shared per source site) -------------------------
-        by_src: Dict[str, List[_SimXfer]] = {}
-        for x in scanners:
-            by_src.setdefault(x.source, []).append(x)
         for src, xs in by_src.items():
             site = self.graph.sites[src]
             rate = site.scan_files_per_s / max(1, len(xs))
@@ -153,7 +210,7 @@ class SimulatedTransport(Transport):
                     x.status = Status.FAILED
                     x.faults += 1
                     x.detail = FaultKind.OOM_SCAN.value
-                    x.completed_at = self.clock.now
+                    x.completed_at = now
                     self.notifier.notify(
                         f"scan OOM on {src} for {x.dataset.path} "
                         f"({x.dataset.files} files) — split into smaller requests",
@@ -164,14 +221,71 @@ class SimulatedTransport(Transport):
                     x.phase = "move"
 
         # --- data movement (fair share of route + site caps) -----------------
-        active_by_route: Dict[Tuple[str, str], int] = {}
-        for x in movers:
-            r = (x.source, x.destination)
-            active_by_route[r] = active_by_route.get(r, 0) + 1
-        for x in movers:
-            rate = self.graph.effective_rate(x.source, x.destination,
-                                             active_by_route)
-            self._advance_mover(x, dt, rate)
+        if movers:
+            self._advance_movers(movers, dt)
+
+        # --- evict terminal transfers to the archive -------------------------
+        finished = [uid for uid, x in self._live.items()
+                    if x.status in (Status.SUCCEEDED, Status.FAILED)]
+        for uid in finished:
+            self._archive[uid] = self._state_of(self._live.pop(uid))
+
+    def _advance_movers(self, movers: List[_SimXfer], dt: float) -> None:
+        """Batched advance of the live mover pool.  The fair-share rate is
+        computed once per route; a structure-of-arrays view of the pool then
+        classifies each mover: the common case (no byte boundary reached
+        within ``dt``) is resolved with pure array ops, and only movers that
+        hit a fault mark, halt point, or completion take the segment-exact
+        scalar walk.  Every arithmetic expression in the fast path mirrors
+        ``_advance_mover``'s first loop iteration operation-for-operation, so
+        both paths produce bit-identical trajectories."""
+        route_rate = self._route_rates(movers)
+        if not self.vectorized or dt <= 1e-9:
+            for x in movers:
+                self._advance_mover(x, dt, route_rate[(x.source, x.destination)])
+            return
+        n = len(movers)
+        inf = float("inf")
+        rate = np.empty(n)
+        bd = np.empty(n)       # bytes_done
+        st = np.empty(n)       # stall_left
+        halt = np.empty(n)     # permission-halt byte position (inf if none)
+        bound = np.empty(n)    # next byte boundary: completion/halt/fault mark
+        for i, x in enumerate(movers):
+            rate[i] = route_rate[(x.source, x.destination)]
+            bd[i] = x.bytes_done
+            st[i] = x.stall_left
+            h = inf
+            if (x.dataset.unreadable
+                    and not self.notifier.is_fixed(x.dataset.path)):
+                h = UNREADABLE_HALT_FRACTION * x.dataset.bytes
+            halt[i] = h
+            nxt = min(float(x.dataset.bytes), h)
+            if x.fault_marks and x.fault_marks[0] < nxt:
+                nxt = x.fault_marks[0]
+            bound[i] = nxt
+        # stall is consumed first (exactly as the scalar loop does)
+        rem = np.maximum(0.0, dt - st)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            need = np.where(rate > 0,
+                            np.maximum(0.0, bound - bd) / rate, inf)
+        # movers whose whole dt is eaten by stall never reach a boundary;
+        # otherwise the fast path requires rate > 0, not already at the halt
+        # point, and the next boundary strictly beyond this tick
+        fast = (rem <= 1e-9) | ((rate > 0) & (bd < halt) & (need > rem))
+        new_stall = np.maximum(0.0, st - dt)
+        moved = np.where(rem > 1e-9, rate * rem, 0.0)
+        for i, x in enumerate(movers):
+            if not fast[i]:
+                self._advance_mover(x, dt,
+                                    route_rate[(x.source, x.destination)])
+                continue
+            x.stall_left = float(new_stall[i])
+            r = float(rem[i])
+            if r > 1e-9:
+                x.bytes_done += float(rate[i]) * r
+                x.active_s += r
+                self._log_flow((x.source, x.destination), float(moved[i]))
 
     def _advance_mover(self, x: _SimXfer, dt: float, rate: float) -> None:
         """Advance one moving transfer by wall time ``dt`` at fair-share
@@ -233,8 +347,7 @@ class SimulatedTransport(Transport):
                 x.completed_at = self.clock.now
                 break
         if moved_total > 0:
-            self.flow_log.append(
-                (self.clock.now, (x.source, x.destination), moved_total))
+            self._log_flow((x.source, x.destination), moved_total)
 
     # ------------------------------------------------------- next-event hints
     def next_event_hint(self) -> float:
@@ -246,16 +359,14 @@ class SimulatedTransport(Transport):
         them exactly within a tick — but their stall time is folded into each
         completion estimate.  Returns ``inf`` when nothing is in flight;
         pause-window boundaries are the caller's responsibility (see
-        ``PauseManager.next_boundary``)."""
+        ``PauseManager.next_boundary``).  Touches only the live pool."""
         now = self.clock.now
         best = float("inf")
+        paused = self._pause_memo(now)
         scanners_by_src: Dict[str, List[_SimXfer]] = {}
         movers: List[_SimXfer] = []
-        for x in self._xfers.values():
-            if x.status not in (Status.ACTIVE, Status.PAUSED):
-                continue
-            if (self.pause.paused(x.source, now)
-                    or self.pause.paused(x.destination, now)):
+        for x in self._live.values():
+            if paused(x.source) or paused(x.destination):
                 continue        # state flips at a pause boundary, not here
             if x.phase == "scan":
                 scanners_by_src.setdefault(x.source, []).append(x)
@@ -269,13 +380,9 @@ class SimulatedTransport(Transport):
                     return 1.0  # OOM fires on the very next tick
                 if rate > 0:
                     best = min(best, max(0.0, x.scan_files_left / rate))
-        active_by_route: Dict[Tuple[str, str], int] = {}
+        route_rate = self._route_rates(movers)
         for x in movers:
-            r = (x.source, x.destination)
-            active_by_route[r] = active_by_route.get(r, 0) + 1
-        for x in movers:
-            rate = self.graph.effective_rate(x.source, x.destination,
-                                             active_by_route)
+            rate = route_rate[(x.source, x.destination)]
             if rate <= 0:
                 continue
             halt_active = (x.dataset.unreadable
@@ -292,13 +399,18 @@ class SimulatedTransport(Transport):
 
 
 # ================================================================== local FS
+_CHUNK_BYTES = 4 * 1024 * 1024
+
+
 class LocalFSTransport(Transport):
     """Moves real bytes between site directories with integrity verification.
 
     Site ``X`` maps to ``root/X/``.  A transfer of dataset path ``P`` copies
-    ``root/src/P`` -> ``root/dst/P`` file by file, checksumming source and
-    destination (paper: Globus checksums every file and retransmits corrupted
-    ones).  ``corruptor`` lets tests flip bytes in flight to prove detection.
+    ``root/src/P`` -> ``root/dst/P`` file by file in ``_CHUNK_BYTES`` pieces,
+    checksumming source and destination incrementally as the bytes stream
+    through (paper: Globus checksums every file and retransmits corrupted
+    ones) — whole files are never held in memory.  ``corruptor`` lets tests
+    flip bytes in flight (it sees each chunk) to prove detection.
     """
 
     def __init__(self, root: str,
@@ -310,8 +422,31 @@ class LocalFSTransport(Transport):
     def site_dir(self, site: str) -> str:
         return os.path.join(self.root, site)
 
+    def _copy_attempt(self, sp: str, dp: str) -> Tuple[int, int]:
+        """Stream one source→destination copy; returns (nbytes, source
+        checksum).  The corruptor (if any) mangles chunks in flight."""
+        from repro.core.integrity import StreamingChecksum
+        src_sum = StreamingChecksum()
+        nbytes = 0
+        with open(sp, "rb") as fin, open(dp, "wb") as fout:
+            while True:
+                chunk = fin.read(_CHUNK_BYTES)
+                if not chunk:
+                    break
+                nbytes += len(chunk)
+                src_sum.update(chunk)
+                payload = chunk
+                if self.corruptor is not None:
+                    payload = self.corruptor(sp, chunk)
+                fout.write(payload)
+        return nbytes, src_sum.digest()
+
+    @staticmethod
+    def _checksum_file(path: str) -> int:
+        from repro.core.integrity import stream_file_checksum
+        return stream_file_checksum(path)[1]
+
     def submit(self, dataset: Dataset, source: str, destination: str) -> str:
-        from repro.core.integrity import file_checksum
         uid = str(uuidlib.uuid4())
         src_base = os.path.join(self.site_dir(source), dataset.path.lstrip("/"))
         dst_base = os.path.join(self.site_dir(destination), dataset.path.lstrip("/"))
@@ -328,23 +463,14 @@ class LocalFSTransport(Transport):
                 for fn in files:
                     sp = os.path.join(dirpath, fn)
                     dp = os.path.join(ddir, fn)
-                    with open(sp, "rb") as f:
-                        data = f.read()
-                    want = file_checksum(data)
                     for _attempt in range(3):
-                        payload = data
-                        if self.corruptor is not None:
-                            payload = self.corruptor(sp, data)
-                        with open(dp, "wb") as f:
-                            f.write(payload)
-                        with open(dp, "rb") as f:
-                            got = file_checksum(f.read())
-                        if got == want:
+                        size, want = self._copy_attempt(sp, dp)
+                        if self._checksum_file(dp) == want:
                             break
                         faults += 1  # integrity fault -> retransmit
                     else:
                         raise IOError(f"persistent corruption for {sp}")
-                    nbytes += len(data)
+                    nbytes += size
                     nfiles += 1
             st = TransferState(Status.SUCCEEDED, bytes_done=nbytes,
                                files_done=nfiles, dirs_done=ndirs, faults=faults)

@@ -62,12 +62,23 @@ def bytes_to_words(data: bytes) -> np.ndarray:
 
 
 # ------------------------------------------------------------------- hashers
-def checksum_words_np(words: np.ndarray, nbytes: int) -> int:
+def fold_words_np(words: np.ndarray, start_word: int = 0) -> int:
+    """XOR-fold a word slice whose first element sits at global word offset
+    ``start_word``.  Because the reduction is associative+commutative and the
+    position is baked into each word, partial folds over consecutive slices
+    XOR together to the whole-buffer fold — the basis of the streaming
+    (chunked) hasher in ``core.integrity``."""
     words = words.astype(np.uint32)
-    idx = np.arange(words.size, dtype=np.uint32)
+    if not words.size:
+        return 0
+    idx = np.arange(words.size, dtype=np.uint32) + np.uint32(
+        start_word & 0xFFFFFFFF)
     g = _mix32_np(words ^ (idx * PHI))
-    h = np.bitwise_xor.reduce(g) if g.size else np.uint32(0)
-    return finalize32_np(int(h), nbytes)
+    return int(np.bitwise_xor.reduce(g))
+
+
+def checksum_words_np(words: np.ndarray, nbytes: int) -> int:
+    return finalize32_np(fold_words_np(words), nbytes)
 
 
 def checksum_bytes_np(data: bytes) -> int:

@@ -57,14 +57,16 @@ def _next_event_dt(world, now: float, fix_at: Dict[str, float]) -> float:
     return max(MIN_STEP_S, min(dt, MAX_STEP_S))
 
 
-def _pending_top_ups(world) -> bool:
-    """True while any published dataset has not been admitted to the catalog
-    (membership, not time comparison: the daily incremental check can lag an
-    event that lands exactly on a publication timestamp)."""
+def _outstanding_top_ups(world) -> set:
+    """Published datasets not yet admitted to the catalog (membership, not
+    time comparison: the daily incremental check can lag an event that lands
+    exactly on a publication timestamp).  Computed once per run; the driver
+    shrinks the set as ``maybe_check`` admits paths, instead of rescanning
+    the feed every iteration."""
     if world.incremental is None:
-        return False
-    return any(d.path not in world.catalog
-               for _, d in world.incremental.feed.all_events())
+        return set()
+    return {d.path for _, d in world.incremental.feed.all_events()
+            if d.path not in world.catalog}
 
 
 def run_world(world, engine: str = "events",
@@ -87,16 +89,27 @@ def run_world(world, engine: str = "events",
     fix_at: Dict[str, float] = {}
     next_snap_day = 1.0
     stats = stats if stats is not None else EngineStats()
+    pending_top_ups = _outstanding_top_ups(world)
+    feed_cursor = (world.incremental.feed.count()
+                   if world.incremental is not None else 0)
     while clock.now < cfg.max_days * DAY:
         stats.iterations += 1
         sched.step(clock.now)
         apply_human_fixes(world.notifier, fix_at, clock.now,
                           cfg.human_fix_days)
         if world.incremental is not None:
-            world.incremental.maybe_check(clock.now)
+            pending_top_ups.difference_update(
+                world.incremental.maybe_check(clock.now))
         if on_iteration is not None:
             on_iteration(world, clock.now)
-        done = sched.done() and not _pending_top_ups(world)
+        if world.incremental is not None:
+            feed = world.incremental.feed
+            if feed.count() > feed_cursor:  # published mid-run (e.g. by the
+                pending_top_ups.update(     # observer hook): keep running
+                    d.path for _, d in feed.events_since(feed_cursor)
+                    if d.path not in world.catalog)
+                feed_cursor = feed.count()
+        done = sched.done() and not pending_top_ups
         if done and engine == "events":
             break           # stop exactly at the last event's timestamp
         dt = (cfg.step_s if engine == "step"

@@ -11,8 +11,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.scenarios.spec import (FaultProfileSpec, OutageSpec, RouteSpec,
-                                  ScenarioSpec, SiteSpec, TopUpSpec)
+from repro.scenarios.spec import (CatalogSpec, FaultProfileSpec, OutageSpec,
+                                  RouteSpec, ScenarioSpec, SiteSpec, TopUpSpec)
 
 # --------------------------------------------------------------- paper sites
 _LLNL = SiteSpec("LLNL", read_gbps=1.5, write_gbps=1.5,
@@ -141,10 +141,30 @@ COLD_START_RELAY = ScenarioSpec(
     max_days=400.0)
 
 
+MEGA_CAMPAIGN = ScenarioSpec(
+    name="mega-campaign",
+    description="Production-scale stress: the same 7.3 PB sliced into "
+                "20,480 datasets replicated to three LCFs over the "
+                "four-site mesh — ~61k table rows, the regime where "
+                "per-iteration cost must stay O(active), not O(catalog).",
+    source="LLNL", replicas=("ALCF", "OLCF", "NERSC"),
+    sites=(_LLNL, _ALCF, _OLCF, _NERSC),
+    routes=_PAPER_ROUTES + (
+        RouteSpec("LLNL", "NERSC", 2 * 0.650),
+        RouteSpec("ALCF", "NERSC", 2 * 1.800),
+        RouteSpec("NERSC", "ALCF", 2 * 1.800),
+        RouteSpec("OLCF", "NERSC", 2 * 2.000),
+        RouteSpec("NERSC", "OLCF", 2 * 2.000),
+    ),
+    outages=_PAPER_OUTAGES,
+    catalog=CatalogSpec(n_datasets=20_480),
+    max_days=400.0)
+
+
 _REGISTRY: Dict[str, ScenarioSpec] = {
     s.name: s for s in (
         PAPER_2022, FOUR_SITE_MESH, DEGRADED_SOURCE, FAULT_STORM,
-        FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY)
+        FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY, MEGA_CAMPAIGN)
 }
 
 

@@ -59,6 +59,7 @@ def _run_variant(v: Variant) -> Dict:
         "engine": v.engine,
         "wall_s": round(wall, 3),
         "iterations": stats.iterations,
+        "events_per_s": round(stats.iterations / max(wall, 1e-9), 1),
         "duration_days": round(rep.duration_days, 3),
         "floor_days": round(rep.floor_days, 3),
         "total_tb": round(rep.total_bytes / 1024 ** 4, 3),

@@ -83,7 +83,7 @@ def test_registry_has_required_scenarios():
     assert len(names) >= 6
     for required in ("paper-2022", "four-site-mesh", "degraded-source",
                      "fault-storm", "flaky-network", "incremental-top-up",
-                     "cold-start-relay"):
+                     "cold-start-relay", "mega-campaign"):
         assert required in names
     with pytest.raises(KeyError):
         get_scenario("no-such-scenario")
@@ -169,6 +169,29 @@ def test_incremental_top_up_absorbs_new_datasets():
     assert rep.duration_days * DAY > max(world.top_up_times)
 
 
+def test_mid_run_publication_keeps_campaign_alive():
+    """A dataset published to the feed *after* run_world starts (e.g. from
+    the observer hook) must still be admitted and replicated — the driver's
+    outstanding-top-up set picks up feed growth, it is not a one-shot
+    snapshot."""
+    from repro.core.routes import Dataset
+    spec = get_scenario("incremental-top-up")
+    world = spec.build(scale=0.004, seed=0, n_datasets=8)
+    late = "/css03_data/CMIP6/LATE/ds-mid-run"
+    state = {"published": False}
+
+    def observer(w, now):
+        if not state["published"] and now > 5 * DAY:
+            state["published"] = True
+            w.incremental.feed.publish(now + DAY,
+                                       Dataset(late, 1 * GB, 50, 5))
+
+    run_world(world, engine="events", on_iteration=observer)
+    assert state["published"]
+    for dst in spec.replicas:
+        assert world.table.get(late, dst).status == Status.SUCCEEDED
+
+
 def test_degraded_source_slower_than_baseline():
     # enough bytes (0.73 PB) that the source bandwidth, not the maintenance
     # calendar, bounds the campaign
@@ -189,16 +212,21 @@ def test_fault_storm_produces_heavier_fault_load():
 
 
 # ------------------------------------------------- event/step equivalence
-def test_event_engine_equivalent_to_step_driver():
+@pytest.mark.parametrize("vectorized", (True, False),
+                         ids=("vectorized", "scalar"))
+def test_event_engine_equivalent_to_step_driver(vectorized):
     """Acceptance: paper-2022 under events matches the step-driven
     ``run_campaign`` duration within 5% and reproduces the fault-histogram
-    shape, at far fewer driver iterations."""
+    shape, at far fewer driver iterations — with the vectorized mover pool
+    AND the scalar segment walk."""
     n, scale, seed = 24, 0.02, 0
     step_rep = run_campaign(CampaignConfig(n_datasets=n, scale=scale,
                                            seed=seed))
     stats = EngineStats()
-    ev_rep = run_scenario("paper-2022", engine="events", scale=scale,
-                          seed=seed, n_datasets=n, stats=stats)
+    world = get_scenario("paper-2022").build(scale=scale, seed=seed,
+                                             n_datasets=n)
+    world.transport.vectorized = vectorized
+    ev_rep = run_world(world, engine="events", stats=stats)
     assert abs(ev_rep.duration_days - step_rep.duration_days) \
         <= 0.05 * step_rep.duration_days
     # completion equivalence
