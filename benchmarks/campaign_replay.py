@@ -22,6 +22,11 @@ wall-clock / iterations / events-per-second per point into
 ``BENCH_scenarios.json`` — the O(active) acceptance evidence: events/s (and
 µs per iteration) must stay flat as the catalog grows.  ``--scenario
 mega-campaign`` replays the ≥20k-dataset four-site registry scenario.
+
+``--checkpoint-bench`` measures the durable-checkpoint tax: a cadenced
+snapshot run vs a bare run, with the (required) bit-identical-trajectory
+verdict, mean write latency, and snapshot size recorded under the
+``checkpointing`` key of ``BENCH_scenarios.json``.
 """
 from __future__ import annotations
 
@@ -122,6 +127,54 @@ def scaling_point(n_datasets: int, scenario: str = "paper-2022",
     }
 
 
+def checkpoint_bench(n_datasets: int = 48, every: int = 25, seed: int = 0,
+                     workdir: str = None) -> dict:
+    """Cost of durable checkpointing on the paper-2022 event replay: run
+    uninterrupted, then again with a snapshot every ``every`` iterations,
+    and report write cadence cost, snapshot size, and — the load-bearing
+    bit — that the checkpointed trajectory is identical to the bare one."""
+    import shutil
+    import tempfile
+
+    from repro.core.snapshot import Checkpointer, trajectory_summary
+    from repro.scenarios.events import EngineStats, run_world
+    from repro.scenarios.registry import get_scenario
+
+    spec = get_scenario("paper-2022")
+    world = spec.build(seed=seed, n_datasets=n_datasets)
+    stats = EngineStats()
+    t0 = time.time()
+    rep = run_world(world, stats=stats)
+    bare_wall = time.time() - t0
+    ref = trajectory_summary(rep, stats, world.table)
+
+    own_dir = workdir is None
+    workdir = workdir or tempfile.mkdtemp(prefix="ckpt-bench-")
+    world2 = spec.build(seed=seed, n_datasets=n_datasets)
+    stats2 = EngineStats()
+    ck = Checkpointer(workdir, every=every)
+    t0 = time.time()
+    rep2 = run_world(world2, stats=stats2, checkpointer=ck)
+    wall = time.time() - t0
+    res = trajectory_summary(rep2, stats2, world2.table)
+    if own_dir:
+        shutil.rmtree(workdir, ignore_errors=True)
+    return {
+        "n_datasets": n_datasets,
+        "every": every,
+        "iterations": stats2.iterations,
+        "writes": ck.writes,
+        "write_ms_mean": round(1000.0 * ck.write_s / max(1, ck.writes), 2),
+        "snapshot_bytes": ck.last_bytes,
+        "bare_wall_s": round(bare_wall, 3),
+        "wall_s": round(wall, 3),
+        "overhead_pct": round(100.0 * (wall - bare_wall) / max(bare_wall, 1e-9),
+                              1),
+        "identical_to_bare": res == ref,
+        "succeeded_digest": ref["succeeded_digest"],
+    }
+
+
 def scaling(ns=SCALING_NS, scenario: str = "paper-2022", seed: int = 0) -> dict:
     rows = []
     for n in ns:
@@ -144,6 +197,12 @@ def main():
     ap.add_argument("--compare-engines", action="store_true",
                     help="benchmark step vs event engine on paper-2022 and "
                          "record the speedup in BENCH_scenarios.json")
+    ap.add_argument("--checkpoint-bench", action="store_true",
+                    help="measure durable-checkpoint overhead (cadenced "
+                         "snapshots vs bare run) and record it in "
+                         "BENCH_scenarios.json")
+    ap.add_argument("--checkpoint-every", type=int, default=25,
+                    help="snapshot cadence for --checkpoint-bench")
     ap.add_argument("--scaling", action="store_true",
                     help="replay --scenario at increasing catalog sizes and "
                          "record the scaling curve in BENCH_scenarios.json")
@@ -160,6 +219,12 @@ def main():
         key = ("scaling" if args.scenario == "paper-2022"
                else f"scaling_{args.scenario}")
         emit_bench([], path=args.bench_out, extra={key: doc})
+        return
+    if args.checkpoint_bench:
+        doc = checkpoint_bench(n_datasets=min(args.datasets, 48),
+                               every=args.checkpoint_every)
+        emit_bench([], path=args.bench_out, extra={"checkpointing": doc})
+        print(json.dumps(doc, indent=2))
         return
     if args.compare_engines:
         cmp = compare_engines(n_datasets=min(args.datasets, 48),

@@ -1,0 +1,93 @@
+"""CI perf gate: fail when the paper-2022 replay regresses vs the committed
+baseline.
+
+Compares a freshly measured ``BENCH_scenarios.json`` (``--candidate``)
+against the repository's committed one (``--baseline``) on the
+``engine_comparison`` block:
+
+  * hard determinism invariants (machine-independent): the event-engine
+    replay must reach the same iteration count, simulated duration, and
+    fault totals as the baseline — a drift here means behavior changed, not
+    just speed;
+  * wall-clock gate: the event-engine replay may not regress more than
+    ``--max-regress`` (default 0.25 = +25%) vs the baseline.  Raw wall
+    clock is machine-sensitive (CI runners vs the committing machine), so
+    the gate normalizes each measurement by its *own run's* step-engine
+    wall clock — both engines replay the identical campaign in the same
+    process, so the events/step ratio cancels machine speed and isolates
+    the event engine's relative cost, which is what a perf regression
+    actually moves.
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_scenarios.json --candidate BENCH_ci.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(baseline: dict, candidate: dict, max_regress: float) -> list:
+    """Returns a list of failure strings (empty = pass)."""
+    fails = []
+    try:
+        base = baseline["engine_comparison"]
+        cand = candidate["engine_comparison"]
+    except KeyError as e:
+        return [f"missing engine_comparison block: {e}"]
+    if base.get("n_datasets") != cand.get("n_datasets") or \
+            base.get("seed") != cand.get("seed"):
+        return [f"benchmark shapes differ: baseline "
+                f"n={base.get('n_datasets')}/seed={base.get('seed')} vs "
+                f"candidate n={cand.get('n_datasets')}/seed={cand.get('seed')}"]
+    b_ev, c_ev = base["events"], cand["events"]
+    for key in ("iterations", "duration_days", "faults_total", "quarantined"):
+        if b_ev.get(key) != c_ev.get(key):
+            fails.append(f"determinism drift in events.{key}: "
+                         f"baseline {b_ev.get(key)} vs candidate {c_ev.get(key)}")
+    # machine-normalized wall-clock: events cost as a fraction of the same
+    # run's step-engine cost (the step driver replays the identical campaign,
+    # so runner speed cancels out of the ratio)
+    b_ratio = b_ev["wall_s"] / max(base["step"]["wall_s"], 1e-9)
+    c_ratio = c_ev["wall_s"] / max(cand["step"]["wall_s"], 1e-9)
+    limit = b_ratio * (1.0 + max_regress)
+    if c_ratio > limit:
+        fails.append(
+            f"paper-2022 event replay wall-clock regressed: "
+            f"events/step ratio {c_ratio:.4f} > {limit:.4f} "
+            f"(baseline {b_ratio:.4f} + {max_regress:.0%}); raw "
+            f"{c_ev['wall_s']:.3f}s vs baseline {b_ev['wall_s']:.3f}s)")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_scenarios.json")
+    ap.add_argument("--candidate", required=True)
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed normalized wall-clock slowdown fraction "
+                         "(0.25 = +25%%)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    fails = check(baseline, candidate, args.max_regress)
+    for tag, doc in (("baseline ", baseline), ("candidate", candidate)):
+        ec = doc.get("engine_comparison", {})
+        ev, st = ec.get("events", {}), ec.get("step", {})
+        print(f"{tag}: events={ev.get('wall_s')}s step={st.get('wall_s')}s "
+              f"iters={ev.get('iterations')} days={ev.get('duration_days')} "
+              f"faults={ev.get('faults_total')}")
+    if fails:
+        for f_ in fails:
+            print(f"FAIL: {f_}", file=sys.stderr)
+        return 1
+    print(f"OK: within +{args.max_regress:.0%} of baseline normalized "
+          "wall-clock, determinism invariants intact")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -65,12 +65,15 @@ def build_campaign(cfg: CampaignConfig, *,
                    pause: Optional[PauseManager] = None,
                    injector: Optional[FaultInjector] = None,
                    retry: Optional[RetryPolicy] = None,
-                   max_active_per_route: int = 2):
+                   max_active_per_route: int = 2,
+                   table: Optional[TransferTable] = None):
     """Wire up catalog, sites, calendar, transport, table, scheduler.
 
     The keyword overrides let a ``repro.scenarios.spec.ScenarioSpec`` compile
     its own topology, maintenance calendar, and fault profile onto the same
     wiring; with no overrides this reproduces the paper's 2022 campaign.
+    ``table`` accepts a pre-populated transfer table (checkpoint resume); the
+    populate pass then inserts nothing, because every row already exists.
     """
     if graph is None:
         graph = paper_route_graph()
@@ -112,7 +115,8 @@ def build_campaign(cfg: CampaignConfig, *,
     if retry is None:
         retry = RetryPolicy(max_retries=8, backoff_s=3600.0)
     transport = SimulatedTransport(graph, clock, pause, injector, notifier, retry)
-    table = TransferTable()
+    if table is None:
+        table = TransferTable()
     sched = ReplicationScheduler(
         table, transport, catalog,
         ReplicationPolicy(cfg.source, cfg.replicas, max_active_per_route),

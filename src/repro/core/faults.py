@@ -77,6 +77,18 @@ class FaultInjector:
         h = abs(hash(("perm", dataset))) % 10_000
         return h < int(self.persistent_fraction * 10_000)
 
+    # ------------------------------------------------------------ checkpoints
+    def state_dict(self) -> dict:
+        """JSON-serializable RNG stream position + memoized fragilities, so a
+        resumed campaign draws exactly the fault sequence the killed run
+        would have drawn."""
+        return {"rng": self.rng.bit_generator.state,
+                "fragility": dict(self._fragility)}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.rng.bit_generator.state = d["rng"]
+        self._fragility = {k: float(v) for k, v in d["fragility"].items()}
+
 
 class Notifier:
     """Paper §5: persistent failures are resolved by notifying a person.
@@ -96,3 +108,12 @@ class Notifier:
 
     def is_fixed(self, dataset: str) -> bool:
         return self.fixed.get(dataset, False)
+
+    # ------------------------------------------------------------ checkpoints
+    def state_dict(self) -> dict:
+        return {"notifications": list(self.notifications),
+                "fixed": dict(self.fixed)}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.notifications = list(d["notifications"])
+        self.fixed = {k: bool(v) for k, v in d["fixed"].items()}

@@ -339,6 +339,43 @@ class ReplicationScheduler:
         return self.table.count_status(Status.PAUSED) > 0 and len(
             self.table.by_status(Status.PAUSED, destination=dst)) > 0
 
+    # ------------------------------------------------------------ checkpoints
+    def state_dict(self) -> dict:
+        """JSON-serializable copy of the mutable scheduling state: retry
+        backoffs (their heap order included), the per-destination direct
+        queues, and the relay-candidate queues with their donor tracking.
+        Restoring this verbatim — rather than re-deriving queues from the
+        table — preserves heap entry order and lazy-stale entries, so a
+        resumed campaign pops datasets in exactly the order the killed run
+        would have."""
+        assert self._defer_queue is None, "snapshot during re-admission pass"
+        return {
+            "backoff_until": [[ds, dst, t]
+                              for (ds, dst), t in self._backoff_until.items()],
+            "backoff_heap": [[t, ds, dst]
+                             for t, (ds, dst) in self._backoff_heap],
+            "direct": {dst: list(h) for dst, h in self._direct.items()},
+            "direct_member": {dst: sorted(m)
+                              for dst, m in self._direct_member.items()},
+            "relay": [[dst, donor, list(h)]
+                      for (dst, donor), h in self._relay.items()],
+            "relay_donor": {dst: dict(m)
+                            for dst, m in self._relay_donor.items()},
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        """Overwrite the queue state (normally right after construction over a
+        restored table, replacing the constructor's adoption-derived queues
+        with the exact serialized ones)."""
+        self._backoff_until = {(ds, dst): t for ds, dst, t in d["backoff_until"]}
+        self._backoff_heap = [(t, (ds, dst)) for t, ds, dst in d["backoff_heap"]]
+        self._direct = {dst: list(h) for dst, h in d["direct"].items()}
+        self._direct_member = {dst: set(m)
+                               for dst, m in d["direct_member"].items()}
+        self._relay = {(dst, donor): list(h) for dst, donor, h in d["relay"]}
+        self._relay_donor = {dst: dict(m)
+                             for dst, m in d["relay_donor"].items()}
+
     # ------------------------------------------------------- next-event hints
     def next_backoff_expiry(self, now: float) -> float:
         """Earliest future retry-backoff expiry (event-driven simulation

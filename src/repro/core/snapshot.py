@@ -1,0 +1,367 @@
+"""Durable campaign checkpoint/resume (paper §3: "restart and recover from a
+variety of transient failures... largely automatically").
+
+The paper's replication tool survived arbitrary process deaths because all
+progress lived in a database.  Our ``TransferTable`` is already durable, but
+the *driver* carries deterministic state only in memory: the simulation
+clock, the fault-RNG stream position, the scheduler's pending/backoff heaps,
+the transport's live-mover pool, and the run loop's cursors.  A
+``CampaignSnapshot`` serializes all of it, versioned, next to an atomic copy
+of the sqlite transfer table — so a campaign killed at ANY iteration resumes
+from its last checkpoint and replays a **bit-identical** trajectory (same
+iteration count, simulated days, fault sequence, and succeeded-set digest)
+to an uninterrupted run.
+
+Checkpoint directory layout (all writes are temp-file + ``os.replace``)::
+
+    <dir>/snapshot-00001234.json   # CampaignSnapshot at iteration 1234
+    <dir>/table-00001234.sqlite    # matching TransferTable copy
+    <dir>/LATEST                   # name of the newest complete snapshot
+
+``LATEST`` is renamed into place only after both files land, so a crash
+mid-checkpoint leaves the previous snapshot authoritative.  Older epochs are
+garbage-collected (``Checkpointer.keep``).
+
+Determinism contract: every float round-trips exactly (``json`` emits
+shortest-repr doubles), the RNG serializes its bit-generator state, heaps
+serialize in heap order, and dicts preserve insertion order — so the resumed
+process performs the same arithmetic in the same order as the killed one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.transfer_table import Status, TransferTable
+
+SNAPSHOT_VERSION = 1
+SNAPSHOT_PREFIX = "snapshot-"
+TABLE_PREFIX = "table-"
+LATEST_FILE = "LATEST"
+
+
+class SnapshotError(RuntimeError):
+    """Malformed or inconsistent checkpoint state."""
+
+
+class SnapshotVersionError(SnapshotError):
+    """Snapshot written by an incompatible serialization version."""
+
+
+class CampaignKilled(RuntimeError):
+    """Raised by the run loop after a requested kill (signal or
+    ``kill_after``) once a consistent snapshot has been written."""
+
+    def __init__(self, checkpoint_dir: str, iterations: int):
+        super().__init__(
+            f"campaign killed at iteration {iterations}; resume with "
+            f"--resume {checkpoint_dir}")
+        self.checkpoint_dir = checkpoint_dir
+        self.iterations = iterations
+
+
+@dataclass
+class LoopState:
+    """The ``run_world`` loop's own mutable state, checkpointed alongside the
+    world and handed back on resume."""
+    iterations: int = 0
+    fix_at: Dict[str, float] = field(default_factory=dict)
+    next_snap_day: float = 1.0
+    timeline: List[Tuple[float, Dict[str, int]]] = field(default_factory=list)
+    pending_top_ups: Set[str] = field(default_factory=set)
+    feed_cursor: int = 0
+
+
+@dataclass
+class CampaignSnapshot:
+    """Versioned, JSON-serializable image of everything that determines the
+    rest of a campaign's trajectory (the transfer table itself lives in the
+    sibling sqlite file named by ``table_file``)."""
+    version: int
+    scenario: str                 # registry name used to rebuild the world
+    engine: str                   # "events" | "step"
+    scale: float
+    seed: int
+    n_datasets: Optional[int]
+    table_file: str
+    clock_now: float
+    injector: dict                # FaultInjector.state_dict()
+    notifier: dict                # Notifier.state_dict()
+    scheduler: dict               # ReplicationScheduler.state_dict()
+    transport: dict               # SimulatedTransport.state_dict()
+    iterations: int
+    fix_at: Dict[str, float]
+    next_snap_day: float
+    timeline: List[Tuple[float, Dict[str, int]]]
+    pending_top_ups: List[str]
+    feed_cursor: int
+    incremental_last_check: float
+    admitted_top_ups: List[str]
+
+    # ------------------------------------------------------------- serialize
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CampaignSnapshot":
+        version = d.get("version")
+        if version != SNAPSHOT_VERSION:
+            raise SnapshotVersionError(
+                f"snapshot version {version!r} is not supported "
+                f"(this build reads version {SNAPSHOT_VERSION}); "
+                "re-run the campaign or use the writing build to resume")
+        kw = dict(d)
+        # canonicalize the JSON list-of-lists back to the in-memory shapes
+        kw["timeline"] = [(float(t), {k: int(v) for k, v in b.items()})
+                          for t, b in d["timeline"]]
+        kw["pending_top_ups"] = list(d["pending_top_ups"])
+        kw["admitted_top_ups"] = list(d["admitted_top_ups"])
+        names = {f.name for f in dataclasses.fields(cls)}
+        extra = set(kw) - names
+        if extra:
+            raise SnapshotError(f"unknown snapshot fields: {sorted(extra)}")
+        missing = names - set(kw)
+        if missing:
+            raise SnapshotError(f"missing snapshot fields: {sorted(missing)}")
+        return cls(**kw)
+
+    @classmethod
+    def loads(cls, text: str) -> "CampaignSnapshot":
+        return cls.from_dict(json.loads(text))
+
+
+# ---------------------------------------------------------------- capture/apply
+def capture_snapshot(world, loop: LoopState, engine: str,
+                     table_file: str) -> CampaignSnapshot:
+    """Snapshot a ``ScenarioWorld`` at a run-loop boundary.  Read-only: the
+    world's trajectory is unchanged whether or not a snapshot was taken."""
+    feed_events = (world.incremental.feed.all_events()
+                   if world.incremental is not None else [])
+    # archive entries matter only while their row still occupies a slot (the
+    # scheduler polls each terminal uid exactly once); serializing just those
+    # keeps the snapshot O(active transfers), not O(campaign history)
+    pollable = {rec.uuid
+                for rec in world.table.by_status(Status.ACTIVE, Status.QUEUED,
+                                                 Status.PAUSED)
+                if rec.uuid is not None}
+    return CampaignSnapshot(
+        version=SNAPSHOT_VERSION,
+        scenario=world.spec.name,
+        engine=engine,
+        scale=world.scale,
+        seed=world.seed,
+        n_datasets=world.n_datasets,
+        table_file=table_file,
+        clock_now=world.clock.now,
+        injector=world.transport.injector.state_dict(),
+        notifier=world.notifier.state_dict(),
+        scheduler=world.sched.state_dict(),
+        transport=world.transport.state_dict(archive_uids=pollable),
+        iterations=loop.iterations,
+        fix_at=dict(loop.fix_at),
+        next_snap_day=loop.next_snap_day,
+        timeline=[(t, dict(b)) for t, b in loop.timeline],
+        pending_top_ups=sorted(loop.pending_top_ups),
+        feed_cursor=loop.feed_cursor,
+        incremental_last_check=(world.incremental._last_check
+                                if world.incremental is not None else 0.0),
+        admitted_top_ups=sorted(d.path for _, d in feed_events
+                                if d.path in world.catalog),
+    )
+
+
+def apply_snapshot(world, snap: CampaignSnapshot) -> LoopState:
+    """Overwrite a freshly built world's mutable state with the snapshot's.
+    The world must have been built from the same spec/scale/seed (and over
+    the snapshot's restored table).  Returns the loop state to resume with."""
+    if snap.scenario != world.spec.name:
+        raise SnapshotError(
+            f"snapshot is for scenario {snap.scenario!r}, world is "
+            f"{world.spec.name!r}")
+    if world.incremental is not None:
+        by_path = {d.path: d
+                   for _, d in world.incremental.feed.all_events()}
+        for p in snap.admitted_top_ups:
+            world.catalog[p] = by_path[p]   # before live movers re-bind
+        world.incremental._last_check = snap.incremental_last_check
+    elif snap.admitted_top_ups:
+        raise SnapshotError("snapshot has top-ups but the scenario has no "
+                            "incremental feed")
+    world.clock.now = snap.clock_now
+    world.transport.injector.load_state_dict(snap.injector)
+    world.notifier.load_state_dict(snap.notifier)
+    world.sched.load_state_dict(snap.scheduler)
+    world.transport.load_state_dict(snap.transport, world.catalog)
+    return LoopState(
+        iterations=snap.iterations,
+        fix_at=dict(snap.fix_at),
+        next_snap_day=snap.next_snap_day,
+        timeline=[(t, dict(b)) for t, b in snap.timeline],
+        pending_top_ups=set(snap.pending_top_ups),
+        feed_cursor=snap.feed_cursor)
+
+
+# --------------------------------------------------------------------- loading
+def load_snapshot(ckpt_dir: str) -> CampaignSnapshot:
+    """The newest complete snapshot in ``ckpt_dir`` (via ``LATEST``)."""
+    latest = os.path.join(ckpt_dir, LATEST_FILE)
+    if not os.path.exists(latest):
+        raise SnapshotError(f"no {LATEST_FILE} in {ckpt_dir!r} — not a "
+                            "checkpoint directory, or no snapshot completed")
+    with open(latest) as f:
+        name = f.read().strip()
+    with open(os.path.join(ckpt_dir, name)) as f:
+        return CampaignSnapshot.loads(f.read())
+
+
+def resume_world(ckpt_dir: str, spec=None):
+    """Rebuild a runnable world from the newest snapshot in ``ckpt_dir``.
+
+    Returns ``(world, snapshot, loop_state)``; continue with
+    ``run_world(world, engine=snapshot.engine, resume=loop_state)``.  The
+    checkpoint files are read, never mutated — resume as many times as you
+    like.  ``spec`` overrides registry lookup (tests with ad-hoc specs).
+    """
+    snap = load_snapshot(ckpt_dir)
+    if spec is None:
+        from repro.scenarios.registry import get_scenario
+        spec = get_scenario(snap.scenario)
+    table = TransferTable.load(os.path.join(ckpt_dir, snap.table_file))
+    world = spec.build(scale=snap.scale, seed=snap.seed,
+                       n_datasets=snap.n_datasets, table=table)
+    loop = apply_snapshot(world, snap)
+    return world, snap, loop
+
+
+# ----------------------------------------------------------------- checkpointer
+def _atomic_write_text(path: str, text: str) -> None:
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+class Checkpointer:
+    """Writes snapshots at run-loop boundaries: every ``every`` iterations,
+    and unconditionally when a kill was requested (``kill_after`` iteration
+    budget, or a SIGTERM/SIGINT routed through ``install_signal_handlers`` /
+    ``request_kill``) — after which ``CampaignKilled`` is raised so the
+    process can exit knowing a consistent checkpoint exists."""
+
+    def __init__(self, directory: str, every: int = 0,
+                 kill_after: Optional[int] = None, keep: int = 2):
+        self.directory = directory
+        self.every = int(every)
+        self.kill_after = kill_after
+        self.keep = max(1, int(keep))
+        self._anchor: Optional[int] = None  # iterations at last write/run start
+        self._kill = False
+        # telemetry (benchmarks/campaign_replay.py --checkpoint-bench)
+        self.writes = 0
+        self.write_s = 0.0
+        self.last_bytes = 0
+
+    # ------------------------------------------------------------------ kills
+    def request_kill(self) -> None:
+        self._kill = True
+
+    def _on_signal(self, signum, frame) -> None:  # pragma: no cover - trivial
+        self._kill = True
+
+    def install_signal_handlers(
+            self, signums: Sequence[int] = (signal.SIGTERM, signal.SIGINT)
+    ) -> None:
+        """Route termination signals into a checkpoint-then-exit at the next
+        loop boundary (main thread only, as the signal module requires)."""
+        for s in signums:
+            signal.signal(s, self._on_signal)
+
+    # --------------------------------------------------------------- boundary
+    def on_boundary(self, world, loop: LoopState, engine: str) -> None:
+        """Called by ``run_world`` at the top of every iteration (state is
+        consistent there: ``loop.iterations`` iterations fully applied)."""
+        it = loop.iterations
+        if self._anchor is None:
+            self._anchor = it           # cadence counts from run/resume start
+        kill = self._kill or (self.kill_after is not None
+                              and it >= self.kill_after)
+        if kill or (self.every > 0 and it - self._anchor >= self.every):
+            self.write(world, loop, engine)
+        if kill:
+            raise CampaignKilled(self.directory, it)
+
+    def write(self, world, loop: LoopState, engine: str) -> str:
+        """One atomic checkpoint epoch; returns the snapshot filename."""
+        t0 = time.time()
+        os.makedirs(self.directory, exist_ok=True)
+        it = loop.iterations
+        table_file = f"{TABLE_PREFIX}{it:08d}.sqlite"
+        world.table.dump(os.path.join(self.directory, table_file))
+        snap = capture_snapshot(world, loop, engine, table_file)
+        text = snap.dumps()
+        snap_file = f"{SNAPSHOT_PREFIX}{it:08d}.json"
+        _atomic_write_text(os.path.join(self.directory, snap_file), text)
+        # LATEST lands last: a crash before this line leaves the previous
+        # epoch authoritative and this one orphaned (GC'd next time)
+        _atomic_write_text(os.path.join(self.directory, LATEST_FILE),
+                           snap_file + "\n")
+        self._anchor = it
+        self._gc()
+        self.writes += 1
+        self.write_s += time.time() - t0
+        self.last_bytes = (
+            len(text)
+            + os.path.getsize(os.path.join(self.directory, table_file)))
+        return snap_file
+
+    def _gc(self) -> None:
+        """Drop all but the newest ``keep`` complete epochs."""
+        snaps = sorted(f for f in os.listdir(self.directory)
+                       if f.startswith(SNAPSHOT_PREFIX) and f.endswith(".json"))
+        for old in snaps[:-self.keep]:
+            stem = old[len(SNAPSHOT_PREFIX):-len(".json")]
+            for victim in (old, f"{TABLE_PREFIX}{stem}.sqlite"):
+                try:
+                    os.remove(os.path.join(self.directory, victim))
+                except OSError:  # pragma: no cover - best-effort cleanup
+                    pass
+
+
+# --------------------------------------------------------------- trajectory id
+def succeeded_digest(table: TransferTable) -> str:
+    """Order-independent digest of the succeeded set: every SUCCEEDED row's
+    identity and outcome columns, hashed in canonical (dataset, destination)
+    order.  Two campaigns with the same digest moved the same datasets over
+    the same final routes with the same fault/retry/byte outcomes."""
+    h = hashlib.sha256()
+    for rec in table.all():                       # sorted by (dataset, dest)
+        if rec.status is not Status.SUCCEEDED:
+            continue
+        h.update((f"{rec.dataset}|{rec.destination}|{rec.source}|"
+                  f"{rec.faults}|{rec.retries}|{rec.bytes_transferred}|"
+                  f"{rec.rate!r}\n").encode())
+    return h.hexdigest()
+
+
+def trajectory_summary(report, stats, table: TransferTable) -> dict:
+    """The bit-identity acceptance tuple: a resumed campaign must reproduce
+    this dict *exactly* (float equality included) vs an uninterrupted run."""
+    return {
+        "iterations": stats.iterations,
+        "sim_days": report.duration_days,
+        "faults_total": report.faults_total,
+        "quarantined": report.quarantined,
+        "bytes_at": {k: int(v) for k, v in report.bytes_at.items()},
+        "succeeded_digest": succeeded_digest(table),
+    }

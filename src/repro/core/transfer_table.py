@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import os
 import sqlite3
 import threading
 from dataclasses import dataclass
@@ -111,8 +112,49 @@ class TransferTable:
         with self._lock:
             self._conn.executescript(_SCHEMA)
             self._conn.commit()
-            for rec in self._select_db("", ()):     # resume from a disk store
-                self._index_insert(rec)
+            self._rebuild_cache()                   # resume from a disk store
+
+    def close(self) -> None:
+        """Release the sqlite connection (a disk-backed table's file is then
+        safe to reopen or copy; every mutation was already committed)."""
+        with self._lock:
+            self._conn.close()
+
+    # --------------------------------------------------------- durable copies
+    def dump(self, path: str) -> None:
+        """Write a consistent copy of the whole database to ``path``
+        atomically (temp file + rename): readers either see the previous
+        complete table or the new one, never a torn write.  Campaign
+        checkpoints call this once per snapshot."""
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        tmp = f"{path}.tmp"
+        with self._lock:
+            dst = sqlite3.connect(tmp)
+            try:
+                self._conn.backup(dst)
+                dst.commit()
+            finally:
+                dst.close()
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "TransferTable":
+        """An in-memory table initialized from a copy of the sqlite file at
+        ``path``.  The file itself is left untouched, so a checkpoint can be
+        resumed any number of times; cache/index/counter state is rebuilt
+        from the copied rows."""
+        if not os.path.exists(path):
+            raise FileNotFoundError(path)
+        table = cls()
+        src = sqlite3.connect(path)
+        try:
+            with table._lock:
+                src.backup(table._conn)
+                table._rebuild_cache()
+        finally:
+            src.close()
+        return table
 
     def add_listener(self, fn: Listener) -> None:
         """Observe every row mutation: ``fn(record, old_status, old_source)``
@@ -270,6 +312,18 @@ class TransferTable:
             return all(not self._by_status[s] for s in OUTSTANDING)
 
     # ------------------------------------------------------ cache maintenance
+    def _rebuild_cache(self) -> None:
+        """Repopulate the row cache and every derived index/counter from the
+        database (lock held).  Used at construction — including cold-opening
+        a populated disk store — and after ``load`` replaces the db."""
+        self._rows.clear()
+        self._by_status = {s: set() for s in Status}
+        self._route_counts.clear()
+        self._succeeded.clear()
+        self._bytes_ok.clear()
+        for rec in self._select_db("", ()):
+            self._index_insert(rec)
+
     def _index_insert(self, rec: TransferRecord) -> None:
         key = (rec.dataset, rec.destination)
         self._rows[key] = rec

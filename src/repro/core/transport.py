@@ -349,6 +349,65 @@ class SimulatedTransport(Transport):
         if moved_total > 0:
             self._log_flow((x.source, x.destination), moved_total)
 
+    # ------------------------------------------------------------ checkpoints
+    _XFER_SCALARS = ("source", "destination", "submitted_at", "phase",
+                     "scan_files_left", "bytes_done", "active_s", "faults",
+                     "stall_left", "completed_at", "detail")
+    _STATE_SCALARS = ("bytes_done", "files_done", "dirs_done", "faults",
+                      "rate", "detail")
+
+    def state_dict(self, archive_uids: Optional[set] = None) -> dict:
+        """JSON-serializable copy of the mutable simulation state: the live
+        mover pool (insertion order preserved — tick iteration order must
+        survive a resume), the terminal-transfer archive, the tick cursor,
+        and the per-(day, route) flow telemetry.  Datasets are referenced by
+        path; ``load_state_dict`` re-binds them against the catalog.
+
+        ``archive_uids`` restricts the serialized archive to uids that can
+        still be polled (rows still occupying a transfer slot).  Entries the
+        scheduler has already consumed — the archive's vast majority late in
+        a campaign — are dead weight after their row went terminal, so
+        filtering keeps snapshot size O(active), not O(campaign history)."""
+        live = []
+        for uid, x in self._live.items():
+            e = {"uid": uid, "dataset": x.dataset.path,
+                 "status": x.status.value,
+                 "fault_marks": list(x.fault_marks)}
+            for f in self._XFER_SCALARS:
+                e[f] = getattr(x, f)
+            live.append(e)
+        archive = []
+        for uid, st in self._archive.items():
+            if archive_uids is not None and uid not in archive_uids:
+                continue
+            e = {"uid": uid, "status": st.status.value}
+            for f in self._STATE_SCALARS:
+                e[f] = getattr(st, f)
+            archive.append(e)
+        return {"last_tick": self._last_tick, "live": live, "archive": archive,
+                "flow": [[day, src, dst, v]
+                         for (day, (src, dst)), v in self.flow_totals.items()]}
+
+    def load_state_dict(self, d: dict, catalog: Dict[str, Dataset]) -> None:
+        self._last_tick = d["last_tick"]
+        self._live = {}
+        for e in d["live"]:
+            x = _SimXfer(dataset=catalog[e["dataset"]],
+                         source=e["source"], destination=e["destination"],
+                         submitted_at=e["submitted_at"],
+                         status=Status(e["status"]),
+                         fault_marks=[float(m) for m in e["fault_marks"]])
+            for f in self._XFER_SCALARS:
+                setattr(x, f, e[f])
+            self._live[e["uid"]] = x
+        self._archive = {
+            e["uid"]: TransferState(
+                status=Status(e["status"]),
+                **{f: e[f] for f in self._STATE_SCALARS})
+            for e in d["archive"]}
+        self.flow_totals = {(day, (src, dst)): v
+                            for day, src, dst, v in d["flow"]}
+
     # ------------------------------------------------------- next-event hints
     def next_event_hint(self) -> float:
         """Seconds until the earliest projected *state change* among live

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.campaign import (CampaignReport, _bytes_at, aggregate_report,
                                  apply_human_fixes)
 from repro.core.pause import DAY
+from repro.core.snapshot import LoopState
 
 # guards: never advance by less than MIN_STEP_S (numerical safety), never by
 # more than MAX_STEP_S (bounds drift if a hint source under-estimates)
@@ -71,7 +72,8 @@ def _outstanding_top_ups(world) -> set:
 
 def run_world(world, engine: str = "events",
               stats: Optional[EngineStats] = None,
-              on_iteration=None) -> CampaignReport:
+              on_iteration=None, checkpointer=None,
+              resume: Optional[LoopState] = None) -> CampaignReport:
     """Drive a compiled ``ScenarioWorld`` to completion.
 
     ``engine="step"`` reproduces the seed driver (fixed ``cfg.step_s``
@@ -80,19 +82,43 @@ def run_world(world, engine: str = "events",
     ``on_iteration(world, now)``, if given, is called once per driver
     iteration (after the scheduler pass, before the clock advances) — the
     observer hook the interactive example uses for progress display.
+
+    ``checkpointer`` (a ``repro.core.snapshot.Checkpointer``) is consulted at
+    the top of every iteration — the loop's consistency boundary — and may
+    write a durable snapshot and/or raise ``CampaignKilled`` after one.
+    ``resume`` is the ``LoopState`` from ``repro.core.snapshot.resume_world``;
+    the loop then continues the killed campaign's trajectory bit-for-bit.
     """
     if engine not in ("events", "step"):
         raise ValueError(f"unknown engine {engine!r}")
     cfg = world.cfg
     clock, sched, transport = world.clock, world.sched, world.transport
-    timeline: List[Tuple[float, Dict[str, int]]] = []
-    fix_at: Dict[str, float] = {}
-    next_snap_day = 1.0
     stats = stats if stats is not None else EngineStats()
-    pending_top_ups = _outstanding_top_ups(world)
-    feed_cursor = (world.incremental.feed.count()
-                   if world.incremental is not None else 0)
+    if resume is not None:
+        timeline = resume.timeline
+        fix_at = resume.fix_at
+        next_snap_day = resume.next_snap_day
+        stats.iterations = resume.iterations
+        pending_top_ups = set(resume.pending_top_ups)
+        feed_cursor = resume.feed_cursor
+    else:
+        timeline: List[Tuple[float, Dict[str, int]]] = []
+        fix_at: Dict[str, float] = {}
+        next_snap_day = 1.0
+        stats.iterations = 0
+        pending_top_ups = _outstanding_top_ups(world)
+        feed_cursor = (world.incremental.feed.count()
+                       if world.incremental is not None else 0)
+
+    def _loop_state() -> LoopState:
+        return LoopState(iterations=stats.iterations, fix_at=fix_at,
+                         next_snap_day=next_snap_day, timeline=timeline,
+                         pending_top_ups=pending_top_ups,
+                         feed_cursor=feed_cursor)
+
     while clock.now < cfg.max_days * DAY:
+        if checkpointer is not None:
+            checkpointer.on_boundary(world, _loop_state(), engine)
         stats.iterations += 1
         sched.step(clock.now)
         apply_human_fixes(world.notifier, fix_at, clock.now,
@@ -134,5 +160,10 @@ def run_scenario(scenario, engine: str = "events", scale: float = 1.0,
     """Build and run a scenario by name or ``ScenarioSpec``."""
     from repro.scenarios.registry import get_scenario
     spec = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if not hasattr(spec, "build"):
+        raise TypeError(
+            f"{getattr(spec, 'name', spec)!r} is not a buildable scenario "
+            "(crash-resume scenarios run via "
+            "repro.scenarios.crash_resume.run_crash_resume)")
     world = spec.build(scale=scale, seed=seed, n_datasets=n_datasets)
     return run_world(world, engine=engine, stats=stats)

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.scenarios.crash_resume import (CRASH_RESUME_SCENARIOS,
+                                          CrashResumeSpec)
 from repro.scenarios.spec import (CatalogSpec, FaultProfileSpec, OutageSpec,
                                   RouteSpec, ScenarioSpec, SiteSpec, TopUpSpec)
 
@@ -167,21 +169,38 @@ _REGISTRY: Dict[str, ScenarioSpec] = {
         FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY, MEGA_CAMPAIGN)
 }
 
+# the crash-injection family: kill/resume meta-scenarios wrapping the specs
+# above (run via repro.scenarios.crash_resume.run_crash_resume, not build())
+_CRASH_REGISTRY: Dict[str, "CrashResumeSpec"] = dict(CRASH_RESUME_SCENARIOS)
+
 
 def list_scenarios() -> List[str]:
+    """Names of the plain (buildable) ``ScenarioSpec`` scenarios."""
     return sorted(_REGISTRY)
 
 
-def get_scenario(name: str) -> ScenarioSpec:
-    try:
+def list_crash_scenarios() -> List[str]:
+    """Names of the crash-resume (kill/resume) scenario family."""
+    return sorted(_CRASH_REGISTRY)
+
+
+def get_scenario(name: str):
+    """Look up a scenario by name: a ``ScenarioSpec``, or a
+    ``CrashResumeSpec`` for the crash-resume family."""
+    if name in _REGISTRY:
         return _REGISTRY[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown scenario {name!r}; available: {', '.join(sorted(_REGISTRY))}"
-        ) from None
+    if name in _CRASH_REGISTRY:
+        return _CRASH_REGISTRY[name]
+    known = sorted(_REGISTRY) + sorted(_CRASH_REGISTRY)
+    raise KeyError(
+        f"unknown scenario {name!r}; available: {', '.join(known)}")
 
 
-def register(spec: ScenarioSpec) -> ScenarioSpec:
-    """Add a custom scenario (tests and downstream configs)."""
-    _REGISTRY[spec.name] = spec
+def register(spec):
+    """Add a custom scenario (tests and downstream configs); crash-resume
+    specs go into their own family registry."""
+    if isinstance(spec, CrashResumeSpec):
+        _CRASH_REGISTRY[spec.name] = spec
+    else:
+        _REGISTRY[spec.name] = spec
     return spec

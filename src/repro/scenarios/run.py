@@ -2,19 +2,40 @@
 
     PYTHONPATH=src python -m repro.scenarios.run --scenario paper-2022 \
         [--engine events|step] [--datasets N] [--scale S] [--seed K] \
+        [--checkpoint-dir DIR] [--checkpoint-every K] [--kill-after N] \
         [--json out.json] [--verbose]
+    PYTHONPATH=src python -m repro.scenarios.run --resume DIR [...]
     PYTHONPATH=src python -m repro.scenarios.run --list
+
+Operating a campaign: pass ``--checkpoint-dir`` to write durable snapshots
+every ``--checkpoint-every`` iterations and on SIGTERM/SIGINT.  A killed run
+exits with code 3; ``--resume DIR`` continues it from the latest snapshot
+with a bit-identical trajectory (the report's ``trajectory`` block — digest
+included — matches the uninterrupted run's).  ``--kill-after N`` kills the
+run deterministically at iteration N (CI's crash-resume equivalence check).
+
+Crash-resume family scenarios (``--scenario crash-resume-*``) run the whole
+kill/resume experiment against an uninterrupted reference and exit non-zero
+unless the trajectories match.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
+import tempfile
 import time
 from typing import Optional, Sequence
 
-from repro.scenarios.events import EngineStats, run_scenario
-from repro.scenarios.registry import get_scenario, list_scenarios
+from repro.core.snapshot import (CampaignKilled, Checkpointer, SnapshotError,
+                                 resume_world, trajectory_summary)
+from repro.scenarios.crash_resume import CrashResumeSpec, run_crash_resume
+from repro.scenarios.events import EngineStats, run_world
+from repro.scenarios.registry import (get_scenario, list_crash_scenarios,
+                                      list_scenarios)
+
+EXIT_KILLED = 3
 
 
 def report_to_dict(rep, stats: EngineStats, wall_s: float) -> dict:
@@ -41,6 +62,26 @@ def report_to_dict(rep, stats: EngineStats, wall_s: float) -> dict:
     }
 
 
+def _emit(doc: dict, json_path: Optional[str]) -> None:
+    print(json.dumps(doc, indent=2))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+
+
+def _run_crash_family(spec: CrashResumeSpec, args) -> int:
+    if args.engine and args.engine != spec.engine:
+        spec = dataclasses.replace(spec, engine=args.engine)
+    workdir = args.checkpoint_dir or tempfile.mkdtemp(prefix="crash-resume-")
+    t0 = time.time()
+    res = run_crash_resume(spec, workdir, scale=args.scale, seed=args.seed,
+                           n_datasets=args.datasets)
+    res["wall_s"] = round(time.time() - t0, 3)
+    res["checkpoint_dir"] = workdir
+    _emit(res, args.json)
+    return 0 if res["match"] else 1
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.scenarios.run",
@@ -49,42 +90,100 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="scenario name (see --list)")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
-    ap.add_argument("--engine", choices=("events", "step"), default="events")
+    ap.add_argument("--engine", choices=("events", "step"), default=None,
+                    help="driver engine (default: events, or the snapshot's "
+                         "engine when resuming)")
     ap.add_argument("--datasets", type=int, default=None,
                     help="override the catalog's dataset count")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="byte/file-count scale factor (1.0 = full 7.3 PB)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume from the latest snapshot in DIR (scenario, "
+                         "seed, scale, and engine come from the snapshot)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="write durable snapshots into DIR (created on "
+                         "demand); also where SIGTERM/SIGINT checkpoints land")
+    ap.add_argument("--checkpoint-every", type=int, default=200,
+                    metavar="K", help="snapshot cadence in driver iterations "
+                                      "(default 200; 0 = only on kill/signal)")
+    ap.add_argument("--kill-after", type=int, default=None, metavar="N",
+                    help="checkpoint and exit (code 3) once N iterations have "
+                         "run — deterministic crash injection")
     ap.add_argument("--json", default=None, help="also write the report here")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
     if args.list:
-        for name in list_scenarios():
+        for name in list_scenarios() + list_crash_scenarios():
             spec = get_scenario(name)
             print(f"{name:20} {spec.description}")
         return 0
-    if not args.scenario:
-        ap.error("--scenario is required (or use --list)")
+    if not args.scenario and not args.resume:
+        ap.error("--scenario or --resume is required (or use --list)")
+    if args.scenario and args.resume:
+        ap.error("--scenario and --resume are mutually exclusive")
 
-    try:
-        spec = get_scenario(args.scenario)
-    except KeyError as e:
-        print(f"error: {e.args[0]}", file=sys.stderr)
-        return 2
+    if not args.resume:
+        try:
+            spec = get_scenario(args.scenario)
+        except KeyError as e:
+            print(f"error: {e.args[0]}", file=sys.stderr)
+            return 2
+        if isinstance(spec, CrashResumeSpec):
+            return _run_crash_family(spec, args)
+
+    # install signal routing BEFORE the (potentially slow) world build, so a
+    # SIGTERM at any point after startup exits through the checkpoint path
+    ckpt_dir = args.checkpoint_dir or args.resume
+    checkpointer = None
+    if ckpt_dir or args.kill_after is not None:
+        checkpointer = Checkpointer(
+            ckpt_dir or tempfile.mkdtemp(prefix="campaign-ckpt-"),
+            every=args.checkpoint_every, kill_after=args.kill_after)
+        checkpointer.install_signal_handlers()
+
+    resumed_from = None
+    if args.resume:
+        try:
+            world, snap, loop = resume_world(args.resume)
+        except (SnapshotError, FileNotFoundError, KeyError) as e:
+            print(f"error: cannot resume from {args.resume!r}: {e}",
+                  file=sys.stderr)
+            return 2
+        engine = args.engine or snap.engine
+        spec = world.spec
+        resumed_from = {"dir": args.resume, "iterations": snap.iterations}
+    else:
+        world = spec.build(scale=args.scale, seed=args.seed,
+                           n_datasets=args.datasets)
+        loop = None
+        engine = args.engine or "events"
     if args.verbose:
         print(f"# {spec.name}: {spec.description}", file=sys.stderr)
+
     stats = EngineStats()
     t0 = time.time()
-    rep = run_scenario(spec, engine=args.engine, scale=args.scale,
-                       seed=args.seed, n_datasets=args.datasets, stats=stats)
+    try:
+        rep = run_world(world, engine=engine, stats=stats,
+                        checkpointer=checkpointer, resume=loop)
+    except CampaignKilled as killed:
+        _emit({"scenario": spec.name, "engine": engine, "killed": True,
+               "iterations": killed.iterations,
+               "checkpoint_dir": killed.checkpoint_dir,
+               "resume_with": f"python -m repro.scenarios.run "
+                              f"--resume {killed.checkpoint_dir}"},
+              args.json)
+        return EXIT_KILLED
     out = report_to_dict(rep, stats, time.time() - t0)
     out["scenario"] = spec.name
-    out["engine"] = args.engine
-    print(json.dumps(out, indent=2))
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(out, f, indent=2)
+    out["engine"] = engine
+    out["trajectory"] = trajectory_summary(rep, stats, world.table)
+    if resumed_from is not None:
+        out["resumed_from"] = resumed_from
+    if checkpointer is not None:
+        out["checkpoints_written"] = checkpointer.writes
+    _emit(out, args.json)
     return 0
 
 

@@ -100,6 +100,11 @@ class ScenarioWorld:
     notifier: object
     incremental: Optional[IncrementalReplicator] = None
     top_up_times: Tuple[float, ...] = ()
+    # build provenance, recorded so a campaign checkpoint can rebuild an
+    # identical world (repro.core.snapshot)
+    scale: float = 1.0
+    seed: int = 0
+    n_datasets: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -167,9 +172,10 @@ class ScenarioSpec:
                            fault_retry_cost_s=self.faults.fault_retry_cost_s)
 
     def build(self, scale: float = 1.0, seed: int = 0,
-              n_datasets: Optional[int] = None) -> ScenarioWorld:
+              n_datasets: Optional[int] = None, table=None) -> ScenarioWorld:
         """Compile the spec onto the campaign wiring, ready to run under
-        either the fixed-step or the event-driven engine."""
+        either the fixed-step or the event-driven engine.  ``table`` accepts
+        a restored ``TransferTable`` when resuming from a checkpoint."""
         cfg = self.to_campaign_config(scale=scale, seed=seed,
                                       n_datasets=n_datasets)
         injector = FaultInjector(seed=seed,
@@ -179,9 +185,10 @@ class ScenarioSpec:
          notifier) = build_campaign(
             cfg, graph=self.build_graph(), pause=self.build_pause(),
             injector=injector, retry=self.build_retry(),
-            max_active_per_route=self.max_active_per_route)
+            max_active_per_route=self.max_active_per_route, table=table)
         world = ScenarioWorld(self, cfg, graph, catalog, clock, pause,
-                              transport, table, sched, notifier)
+                              transport, table, sched, notifier,
+                              scale=scale, seed=seed, n_datasets=n_datasets)
         if self.top_ups:
             feed = PublishFeed()
             times: List[float] = []

@@ -1,0 +1,380 @@
+"""Durable checkpoint/resume acceptance tests.
+
+The contract (ISSUE 3 / paper §3): a campaign killed at ANY iteration and
+resumed from its last snapshot finishes with a trajectory identical to the
+uninterrupted run — same iteration count, simulated days, fault count, and
+succeeded-set digest — under both driver engines.  Plus: snapshot round-trip
+fidelity field by field, loud version-mismatch failures, checkpoint-directory
+atomicity/GC, the crash-resume scenario family, the CLI kill/resume flow,
+and the ``TransferTable`` resume-from-disk-store path.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.snapshot import (CampaignKilled, CampaignSnapshot,
+                                 Checkpointer, LoopState, SnapshotError,
+                                 SnapshotVersionError, capture_snapshot,
+                                 load_snapshot, resume_world,
+                                 succeeded_digest, trajectory_summary)
+from repro.core.transfer_table import Status, TransferRecord, TransferTable
+from repro.scenarios.crash_resume import CrashResumeSpec, run_crash_resume
+from repro.scenarios.events import EngineStats, run_world
+from repro.scenarios.registry import get_scenario, list_crash_scenarios
+
+SMALL = dict(scale=0.01, seed=0, n_datasets=16)
+
+
+def _reference(spec_name="paper-2022", engine="events", **overrides):
+    kw = dict(SMALL, **overrides)
+    world = get_scenario(spec_name).build(**kw)
+    stats = EngineStats()
+    rep = run_world(world, engine=engine, stats=stats)
+    return trajectory_summary(rep, stats, world.table), stats.iterations, kw
+
+
+# ------------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("engine", ("events", "step"))
+def test_kill_and_resume_bit_identical(tmp_path, engine):
+    """Acceptance: kill at ~50% of iterations, resume from the snapshot, and
+    the final trajectory (digest included) equals the uninterrupted run's."""
+    kw = dict(SMALL) if engine == "events" else dict(
+        scale=0.005, seed=0, n_datasets=10)
+    ref, total, kw = _reference(engine=engine, **kw)
+    spec = get_scenario("paper-2022")
+
+    world = spec.build(**kw)
+    stats = EngineStats()
+    ck = Checkpointer(str(tmp_path), kill_after=total // 2)
+    with pytest.raises(CampaignKilled):
+        run_world(world, engine=engine, stats=stats, checkpointer=ck)
+
+    world2, snap, loop = resume_world(str(tmp_path))
+    assert snap.iterations == total // 2
+    assert snap.engine == engine
+    stats2 = EngineStats()
+    rep2 = run_world(world2, engine=engine, stats=stats2, resume=loop)
+    assert trajectory_summary(rep2, stats2, world2.table) == ref
+
+
+def test_resume_is_repeatable(tmp_path):
+    """A checkpoint is read-only: resuming it twice gives the same result."""
+    ref, total, kw = _reference()
+    spec = get_scenario("paper-2022")
+    world = spec.build(**kw)
+    ck = Checkpointer(str(tmp_path), kill_after=total // 3)
+    with pytest.raises(CampaignKilled):
+        run_world(world, stats=EngineStats(), checkpointer=ck)
+    results = []
+    for _ in range(2):
+        w, snap, loop = resume_world(str(tmp_path))
+        st = EngineStats()
+        rep = run_world(w, engine=snap.engine, stats=st, resume=loop)
+        results.append(trajectory_summary(rep, st, w.table))
+    assert results[0] == results[1] == ref
+
+
+def test_periodic_checkpoints_do_not_perturb_and_gc_keeps_latest(tmp_path):
+    """Cadenced snapshotting must be trajectory-neutral, keep at most
+    ``keep`` epochs on disk, and leave a resumable LATEST even after the
+    campaign completed."""
+    ref, _, kw = _reference()
+    spec = get_scenario("paper-2022")
+    world = spec.build(**kw)
+    stats = EngineStats()
+    ck = Checkpointer(str(tmp_path), every=10, keep=2)
+    rep = run_world(world, stats=stats, checkpointer=ck)
+    assert trajectory_summary(rep, stats, world.table) == ref  # neutral
+    assert ck.writes >= 3
+    snaps = [f for f in os.listdir(tmp_path) if f.startswith("snapshot-")]
+    tables = [f for f in os.listdir(tmp_path) if f.startswith("table-")]
+    assert 1 <= len(snaps) <= 2 and len(tables) == len(snaps)  # GC ran
+    # resume from the last mid-run snapshot: completes to the same trajectory
+    w, snap, loop = resume_world(str(tmp_path))
+    st = EngineStats()
+    rep2 = run_world(w, engine=snap.engine, stats=st, resume=loop)
+    assert trajectory_summary(rep2, st, w.table) == ref
+
+
+def test_signal_requested_kill_checkpoints_at_next_boundary(tmp_path):
+    """The signal path (request_kill) writes a snapshot and raises at the
+    next loop boundary; resuming completes bit-identically."""
+    ref, total, kw = _reference()
+    spec = get_scenario("paper-2022")
+    world = spec.build(**kw)
+    ck = Checkpointer(str(tmp_path))
+    fired_at = total // 4
+
+    def observer(w, now):
+        if not ck._kill and stats_box["stats"].iterations >= fired_at:
+            ck.request_kill()           # as the SIGTERM handler would
+
+    stats_box = {"stats": EngineStats()}
+    with pytest.raises(CampaignKilled) as exc:
+        run_world(world, stats=stats_box["stats"], checkpointer=ck,
+                  on_iteration=observer)
+    assert exc.value.iterations >= fired_at
+    assert os.path.exists(os.path.join(tmp_path, "LATEST"))
+    w, snap, loop = resume_world(str(tmp_path))
+    st = EngineStats()
+    rep = run_world(w, engine=snap.engine, stats=st, resume=loop)
+    assert trajectory_summary(rep, st, w.table) == ref
+
+
+# -------------------------------------------------------- crash-resume family
+def test_crash_resume_family_registered():
+    names = list_crash_scenarios()
+    for required in ("crash-resume-paper", "crash-resume-storm",
+                     "crash-resume-topup", "crash-resume-step"):
+        assert required in names
+        assert isinstance(get_scenario(required), CrashResumeSpec)
+
+
+@pytest.mark.parametrize("name,overrides", [
+    ("crash-resume-paper", dict(scale=0.01, n_datasets=12)),
+    ("crash-resume-storm", dict(scale=0.01, n_datasets=12)),
+    ("crash-resume-topup", dict(scale=0.004, n_datasets=8)),
+    ("crash-resume-step", dict(scale=0.005, n_datasets=10)),
+])
+def test_crash_resume_scenarios_match(tmp_path, name, overrides):
+    """Every family member: N kills + resumes == uninterrupted, exactly."""
+    spec = get_scenario(name)
+    res = run_crash_resume(spec, str(tmp_path), seed=0, **overrides)
+    assert res["kills"], "campaign finished before the first kill point"
+    assert len(res["kills"]) == len(set(spec.kill_fracs))
+    assert res["match"], (res["reference"], res["resumed"])
+
+
+# ------------------------------------------------------- snapshot round-trip
+def _mid_campaign_snapshot(tmp_path):
+    """A snapshot captured mid-flight with live movers, backoff state, and
+    top-up cursors populated (incremental-top-up under fault-storm-ish
+    pressure would be ideal; topup at 50% is plenty)."""
+    spec = get_scenario("incremental-top-up")
+    world = spec.build(scale=0.004, seed=0, n_datasets=8)
+    stats = EngineStats()
+    ck = Checkpointer(str(tmp_path), kill_after=20)
+    with pytest.raises(CampaignKilled):
+        run_world(world, stats=stats, checkpointer=ck)
+    return load_snapshot(str(tmp_path))
+
+
+def test_snapshot_roundtrip_every_field(tmp_path):
+    """Serialize→deserialize preserves every ``CampaignSnapshot`` field
+    exactly (floats bit-for-bit, nested structures canonicalized)."""
+    snap = _mid_campaign_snapshot(tmp_path)
+    # the snapshot is non-trivial: live movers, queues, RNG position, faults
+    assert snap.transport["live"], "no live transfers captured"
+    assert snap.scheduler["direct"] or snap.scheduler["relay"]
+    assert snap.injector["fragility"]
+    assert snap.injector["rng"]["bit_generator"]
+    assert snap.clock_now > 0
+    back = CampaignSnapshot.loads(snap.dumps())
+    for f in dataclasses.fields(CampaignSnapshot):
+        assert getattr(back, f.name) == getattr(snap, f.name), f.name
+    assert back == snap
+    # a second round-trip is a fixed point
+    assert CampaignSnapshot.loads(back.dumps()) == back
+
+
+def test_snapshot_version_mismatch_fails_loudly(tmp_path):
+    snap = _mid_campaign_snapshot(tmp_path)
+    d = snap.to_dict()
+    d["version"] = 999
+    with pytest.raises(SnapshotVersionError, match="999"):
+        CampaignSnapshot.from_dict(d)
+    d.pop("version")
+    with pytest.raises(SnapshotVersionError):
+        CampaignSnapshot.from_dict(d)
+    # unknown/missing payload fields are loud too (forward-compat guard)
+    d2 = snap.to_dict()
+    d2["mystery_field"] = 1
+    with pytest.raises(SnapshotError, match="mystery_field"):
+        CampaignSnapshot.from_dict(d2)
+    d3 = snap.to_dict()
+    d3.pop("clock_now")
+    with pytest.raises(SnapshotError, match="clock_now"):
+        CampaignSnapshot.from_dict(d3)
+
+
+def test_apply_snapshot_rejects_wrong_scenario(tmp_path):
+    from repro.core.snapshot import apply_snapshot
+    snap = _mid_campaign_snapshot(tmp_path)
+    other = get_scenario("paper-2022").build(scale=0.004, seed=0,
+                                             n_datasets=8)
+    with pytest.raises(SnapshotError, match="scenario"):
+        apply_snapshot(other, snap)
+
+
+def test_load_snapshot_refuses_non_checkpoint_dir(tmp_path):
+    with pytest.raises(SnapshotError, match="LATEST"):
+        load_snapshot(str(tmp_path))
+
+
+# ---------------------------------------------------------------- CLI flow
+def test_cli_kill_resume_trajectory_identical(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    base = [sys.executable, "-m", "repro.scenarios.run", "--scenario",
+            "paper-2022", "--datasets", "12", "--scale", "0.01"]
+    ref_json = str(tmp_path / "ref.json")
+    r = subprocess.run(base + ["--json", ref_json], capture_output=True,
+                       text=True, timeout=300, env=env, cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    ref = json.load(open(ref_json))
+    assert "trajectory" in ref and ref["trajectory"]["succeeded_digest"]
+
+    ck = str(tmp_path / "ck")
+    kill_at = max(1, ref["engine_iterations"] // 2)
+    r = subprocess.run(base + ["--checkpoint-dir", ck, "--kill-after",
+                               str(kill_at)],
+                       capture_output=True, text=True, timeout=300, env=env,
+                       cwd=".")
+    assert r.returncode == 3, (r.returncode, r.stderr[-2000:])
+    killed = json.loads(r.stdout)
+    assert killed["killed"] and killed["iterations"] == kill_at
+
+    res_json = str(tmp_path / "resumed.json")
+    r = subprocess.run([sys.executable, "-m", "repro.scenarios.run",
+                        "--resume", ck, "--json", res_json],
+                       capture_output=True, text=True, timeout=300, env=env,
+                       cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    resumed = json.load(open(res_json))
+    assert resumed["trajectory"] == ref["trajectory"]
+    assert resumed["resumed_from"]["iterations"] == kill_at
+
+
+def test_cli_runs_crash_resume_scenario(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.scenarios.run", "--scenario",
+         "crash-resume-paper", "--datasets", "10", "--scale", "0.005",
+         "--checkpoint-dir", str(tmp_path / "w")],
+        capture_output=True, text=True, timeout=600, env=env, cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    doc = json.loads(r.stdout)
+    assert doc["match"] and doc["kills"]
+
+
+# ------------------------------------------- TransferTable disk-store resume
+def _mutate(t: TransferTable):
+    t.populate(["a", "b", "c"], "LLNL", ["ALCF", "OLCF"])
+    t.update("a", "ALCF", status=Status.SUCCEEDED, bytes_transferred=123,
+             rate=4.5, uuid="u1", requested=1.0, completed=2.5, files=7,
+             directories=3)
+    t.update("b", "ALCF", status=Status.FAILED, retries=2, faults=1)
+    t.update("b", "OLCF", status=Status.ACTIVE, uuid="u2", requested=3.0)
+    t.update("c", "OLCF", status=Status.QUARANTINED, faults=7, retries=9)
+    # re-routed relay row: source rewritten, then succeeded
+    t.update("a", "OLCF", source="ALCF", status=Status.SUCCEEDED,
+             bytes_transferred=123, rate=2.25)
+
+
+def test_transfer_table_cold_load_matches_fresh(tmp_path):
+    """The `resume from a disk store` constructor path: reopening a
+    populated sqlite file must reconstruct rows, caches, indexes, and
+    counters exactly as the live table held them."""
+    path = str(tmp_path / "table.sqlite")
+    t = TransferTable(path)
+    _mutate(t)
+    want = t.all()
+    t.close()
+
+    r = TransferTable(path)
+    assert r.all() == want
+    # derived counters/indexes, rebuilt not persisted
+    assert r.bytes_at("ALCF") == 123 and r.bytes_at("OLCF") == 123
+    assert r.succeeded_set("ALCF") == {"a"}
+    assert r.succeeded_set("OLCF") == {"a"}
+    assert r.count_route("LLNL", "ALCF", Status.FAILED) == 1
+    assert r.count_route("ALCF", "OLCF", Status.SUCCEEDED) == 1
+    assert r.count_status(Status.QUARANTINED) == 1
+    assert r.count_status(*Status) == 6
+    assert [x.dataset for x in r.by_status(Status.SUCCEEDED)] == ["a", "a"]
+    assert not r.done()
+    # cache and sqlite agree row for row
+    db_rows = sorted(((x.dataset, x.destination, x.status)
+                      for x in r._select_db("", ())))
+    cache_rows = sorted((x.dataset, x.destination, x.status)
+                        for x in r.all())
+    assert db_rows == cache_rows
+    # the reopened table is fully live: listeners fire, counters track
+    seen = []
+    r.add_listener(lambda rec, old, src: seen.append((rec.dataset, old)))
+    r.update("b", "OLCF", status=Status.SUCCEEDED, bytes_transferred=50)
+    assert seen == [("b", Status.ACTIVE)]
+    assert r.bytes_at("OLCF") == 173
+    r.close()
+
+
+def test_transfer_table_dump_load_roundtrip(tmp_path):
+    path = str(tmp_path / "copy.sqlite")
+    t = TransferTable()
+    _mutate(t)
+    t.dump(path)
+    assert not os.path.exists(path + ".tmp")    # atomic: temp renamed away
+    c = TransferTable.load(path)
+    assert c.all() == t.all()
+    assert c.bytes_at("ALCF") == t.bytes_at("ALCF")
+    # load() copies: mutating the copy leaves the file (and re-loads) intact
+    c.update("a", "ALCF", status=Status.FAILED)
+    c2 = TransferTable.load(path)
+    assert c2.all() == t.all()
+    # dump overwrites atomically with fresh content
+    t.update("c", "ALCF", status=Status.ACTIVE, uuid="u9")
+    t.dump(path)
+    assert TransferTable.load(path).all() == t.all()
+
+
+def test_transfer_table_load_missing_file(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        TransferTable.load(str(tmp_path / "nope.sqlite"))
+
+
+def test_scheduler_resumes_over_cold_loaded_table(tmp_path):
+    """A scheduler constructed over a disk-reopened table adopts its rows:
+    outstanding work continues, finished work is not redone."""
+    from repro.core.campaign import CampaignConfig, build_campaign
+
+    cfg = CampaignConfig(n_datasets=8, scale=0.004, seed=3)
+    path = str(tmp_path / "t.sqlite")
+    # run half a campaign against a disk-backed table, then drop everything
+    g, cat, clock, pause, tr, table, sched, notif = build_campaign(
+        cfg, table=TransferTable(path))
+    for _ in range(60):
+        sched.step(clock.now)
+        clock.advance(cfg.step_s)
+        tr.tick()
+    before = {(r.dataset, r.destination): r.status for r in table.all()}
+    done_before = {k for k, s in before.items() if s == Status.SUCCEEDED}
+    table.close()
+
+    # cold reopen: statuses are intact; in-flight rows (their movers died
+    # with the process) are still occupying their slots, exactly what the
+    # snapshot layer overwrites — here we just verify adoption + durability
+    t2 = TransferTable(path)
+    after = {(r.dataset, r.destination): r.status for r in t2.all()}
+    assert after == before
+    assert {k for k, s in after.items()
+            if s == Status.SUCCEEDED} == done_before
+    t2.close()
+
+
+# --------------------------------------------------------------- digest unit
+def test_succeeded_digest_sensitivity():
+    a, b = TransferTable(), TransferTable()
+    for t in (a, b):
+        t.populate(["x", "y"], "LLNL", ["ALCF"])
+    a.update("x", "ALCF", status=Status.SUCCEEDED, bytes_transferred=10)
+    b.update("x", "ALCF", status=Status.SUCCEEDED, bytes_transferred=10)
+    assert succeeded_digest(a) == succeeded_digest(b)
+    b.update("y", "ALCF", status=Status.SUCCEEDED, bytes_transferred=1)
+    assert succeeded_digest(a) != succeeded_digest(b)
+    a.update("y", "ALCF", status=Status.SUCCEEDED, bytes_transferred=2)
+    assert succeeded_digest(a) != succeeded_digest(b)  # bytes differ
