@@ -27,6 +27,12 @@ mega-campaign`` replays the ≥20k-dataset four-site registry scenario.
 snapshot run vs a bare run, with the (required) bit-identical-trajectory
 verdict, mean write latency, and snapshot size recorded under the
 ``checkpointing`` key of ``BENCH_scenarios.json``.
+
+``--federation-bench`` replays the overlapped two-campaign federation
+(``federation-paper-twice``) under both engines, checks the shared
+source-egress cap at every tick, compares the span against the serial
+back-to-back variant, and records everything (per-member digests included)
+under the ``federation`` key of ``BENCH_scenarios.json``.
 """
 from __future__ import annotations
 
@@ -175,6 +181,94 @@ def checkpoint_bench(n_datasets: int = 48, every: int = 25, seed: int = 0,
     }
 
 
+def federation_bench(n_datasets: int = 32, seed: int = 0,
+                     repeats: int = 3) -> dict:
+    """The federation acceptance experiment, benchmarked: replay the
+    overlapped two-campaign federation under BOTH engines (determinism and
+    wall clock recorded like ``engine_comparison``), the serial back-to-back
+    variant, and the relay-assisted single-campaign comparator.  Records:
+
+      * per-engine iterations / span / faults / per-member digests — the
+        determinism invariants the regression gate pins;
+      * ``source_cap_ok`` — at every transport tick of the overlapped run,
+        aggregate LLNL egress (sum of per-route fair shares × actives) never
+        exceeded the LLNL ``read_bw``;
+      * ``overlap_beats_serial`` — the overlapped federation's span in
+        campaign days beats the serial variant's.
+    """
+    from repro.core.snapshot import federation_trajectory_summary
+    from repro.scenarios.events import EngineStats, run_world
+    from repro.scenarios.registry import get_scenario
+
+    results = {}
+    for engine in ("step", "events"):
+        # wall clock is min-of-``repeats`` (sub-second replays are noisy on
+        # shared CI runners); trajectories are identical across repeats
+        walls = []
+        for _ in range(max(1, repeats)):
+            world = get_scenario("federation-paper-twice").build(
+                seed=seed, n_datasets=n_datasets)
+            transport = world.shared.transport
+            read_bw = world.shared.graph.sites["LLNL"].read_bw
+            cap = {"ok": True, "max_frac": 0.0}
+            orig = transport._route_rates
+
+            def route_rates(movers, _orig=orig, _cap=cap):
+                rates = _orig(movers)
+                active = {}
+                for x in movers:
+                    r = (x.source, x.destination)
+                    active[r] = active.get(r, 0) + 1
+                egress = sum(rates[r] * n for r, n in active.items()
+                             if r[0] == "LLNL")
+                _cap["max_frac"] = max(_cap["max_frac"], egress / read_bw)
+                if egress > read_bw * (1 + 1e-9):
+                    _cap["ok"] = False
+                return rates
+
+            transport._route_rates = route_rates
+            stats = EngineStats()
+            t0 = time.time()
+            rep = run_world(world, engine=engine, stats=stats)
+            walls.append(time.time() - t0)
+        summ = federation_trajectory_summary(rep, stats, world)
+        results[engine] = {
+            "wall_s": round(min(walls), 3),
+            "iterations": stats.iterations,
+            "span_days": round(rep.span_days, 3),
+            "faults_total": sum(m.faults_total for m in rep.members.values()),
+            "source_cap_ok": cap["ok"],
+            "source_cap_max_frac": round(cap["max_frac"], 4),
+            "members": {label: {
+                "sim_days": round(m["sim_days"], 3),
+                "succeeded_digest": m["succeeded_digest"],
+            } for label, m in summ["members"].items()},
+        }
+
+    serial_world = get_scenario("federation-paper-serial").build(
+        seed=seed, n_datasets=n_datasets)
+    serial_stats = EngineStats()
+    serial_rep = run_world(serial_world, engine="events", stats=serial_stats)
+
+    relay_stats = EngineStats()
+    relay_world = get_scenario("paper-2022").build(seed=seed,
+                                                   n_datasets=n_datasets)
+    relay_rep = run_world(relay_world, engine="events", stats=relay_stats)
+
+    step, ev = results["step"], results["events"]
+    return {
+        "scenario": "federation-paper-twice",
+        "n_datasets": n_datasets,
+        "seed": seed,
+        "step": step,
+        "events": ev,
+        "speedup": round(step["wall_s"] / max(ev["wall_s"], 1e-9), 2),
+        "serial_span_days": round(serial_rep.span_days, 3),
+        "relay_single_days": round(relay_rep.duration_days, 3),
+        "overlap_beats_serial": ev["span_days"] < serial_rep.span_days,
+    }
+
+
 def scaling(ns=SCALING_NS, scenario: str = "paper-2022", seed: int = 0) -> dict:
     rows = []
     for n in ns:
@@ -203,6 +297,10 @@ def main():
                          "BENCH_scenarios.json")
     ap.add_argument("--checkpoint-every", type=int, default=25,
                     help="snapshot cadence for --checkpoint-bench")
+    ap.add_argument("--federation-bench", action="store_true",
+                    help="benchmark the overlapped two-campaign federation "
+                         "vs its serial variant (both engines, source-cap "
+                         "check) and record it in BENCH_scenarios.json")
     ap.add_argument("--scaling", action="store_true",
                     help="replay --scenario at increasing catalog sizes and "
                          "record the scaling curve in BENCH_scenarios.json")
@@ -219,6 +317,11 @@ def main():
         key = ("scaling" if args.scenario == "paper-2022"
                else f"scaling_{args.scenario}")
         emit_bench([], path=args.bench_out, extra={key: doc})
+        return
+    if args.federation_bench:
+        doc = federation_bench(n_datasets=min(args.datasets, 32))
+        emit_bench([], path=args.bench_out, extra={"federation": doc})
+        print(json.dumps(doc, indent=2))
         return
     if args.checkpoint_bench:
         doc = checkpoint_bench(n_datasets=min(args.datasets, 48),

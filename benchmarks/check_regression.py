@@ -28,6 +28,23 @@ import json
 import sys
 
 
+def _wall_gate(tag: str, base: dict, cand: dict, max_regress: float,
+               fails: list) -> None:
+    """Machine-normalized wall-clock: events cost as a fraction of the same
+    run's step-engine cost (the step driver replays the identical campaign,
+    so runner speed cancels out of the ratio)."""
+    b_ev, c_ev = base["events"], cand["events"]
+    b_ratio = b_ev["wall_s"] / max(base["step"]["wall_s"], 1e-9)
+    c_ratio = c_ev["wall_s"] / max(cand["step"]["wall_s"], 1e-9)
+    limit = b_ratio * (1.0 + max_regress)
+    if c_ratio > limit:
+        fails.append(
+            f"{tag} event replay wall-clock regressed: "
+            f"events/step ratio {c_ratio:.4f} > {limit:.4f} "
+            f"(baseline {b_ratio:.4f} + {max_regress:.0%}); raw "
+            f"{c_ev['wall_s']:.3f}s vs baseline {b_ev['wall_s']:.3f}s)")
+
+
 def check(baseline: dict, candidate: dict, max_regress: float) -> list:
     """Returns a list of failure strings (empty = pass)."""
     fails = []
@@ -46,18 +63,53 @@ def check(baseline: dict, candidate: dict, max_regress: float) -> list:
         if b_ev.get(key) != c_ev.get(key):
             fails.append(f"determinism drift in events.{key}: "
                          f"baseline {b_ev.get(key)} vs candidate {c_ev.get(key)}")
-    # machine-normalized wall-clock: events cost as a fraction of the same
-    # run's step-engine cost (the step driver replays the identical campaign,
-    # so runner speed cancels out of the ratio)
-    b_ratio = b_ev["wall_s"] / max(base["step"]["wall_s"], 1e-9)
-    c_ratio = c_ev["wall_s"] / max(cand["step"]["wall_s"], 1e-9)
-    limit = b_ratio * (1.0 + max_regress)
-    if c_ratio > limit:
+    _wall_gate("paper-2022", base, cand, max_regress, fails)
+    fails.extend(check_federation(baseline, candidate, max_regress))
+    return fails
+
+
+def check_federation(baseline: dict, candidate: dict,
+                     max_regress: float) -> list:
+    """Federation gate: the overlapped two-campaign replay is held to the
+    same standard as paper-2022 — exact determinism (iterations, span,
+    faults, per-member digests), the shared source-egress cap, the
+    overlap-beats-serial property, and the normalized wall-clock limit."""
+    fails = []
+    base = baseline.get("federation")
+    if base is None:
+        return []               # pre-federation baseline: nothing to gate
+    cand = candidate.get("federation")
+    if cand is None:
+        return ["candidate is missing the federation block "
+                "(run benchmarks/campaign_replay.py --federation-bench)"]
+    if base.get("n_datasets") != cand.get("n_datasets") or \
+            base.get("seed") != cand.get("seed"):
+        return [f"federation benchmark shapes differ: baseline "
+                f"n={base.get('n_datasets')}/seed={base.get('seed')} vs "
+                f"candidate n={cand.get('n_datasets')}/seed={cand.get('seed')}"]
+    b_ev, c_ev = base["events"], cand["events"]
+    for key in ("iterations", "span_days", "faults_total"):
+        if b_ev.get(key) != c_ev.get(key):
+            fails.append(f"federation determinism drift in events.{key}: "
+                         f"baseline {b_ev.get(key)} vs "
+                         f"candidate {c_ev.get(key)}")
+    for label, member in b_ev.get("members", {}).items():
+        got = c_ev.get("members", {}).get(label, {})
+        if member.get("succeeded_digest") != got.get("succeeded_digest"):
+            fails.append(f"federation member {label!r} digest drift: "
+                         f"{member.get('succeeded_digest')} vs "
+                         f"{got.get('succeeded_digest')}")
+    for engine in ("events", "step"):
+        if not cand[engine].get("source_cap_ok"):
+            fails.append(f"federation {engine} replay exceeded the shared "
+                         "LLNL source read cap "
+                         f"(max {cand[engine].get('source_cap_max_frac')}x)")
+    if not cand.get("overlap_beats_serial"):
         fails.append(
-            f"paper-2022 event replay wall-clock regressed: "
-            f"events/step ratio {c_ratio:.4f} > {limit:.4f} "
-            f"(baseline {b_ratio:.4f} + {max_regress:.0%}); raw "
-            f"{c_ev['wall_s']:.3f}s vs baseline {b_ev['wall_s']:.3f}s)")
+            f"overlapped federation no longer beats the serial variant: "
+            f"span {c_ev.get('span_days')} d vs serial "
+            f"{cand.get('serial_span_days')} d")
+    _wall_gate("federation-paper-twice", base, cand, max_regress, fails)
     return fails
 
 

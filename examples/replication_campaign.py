@@ -1,14 +1,17 @@
 """The paper, end to end: replicate a catalog from a slow source to replica
 sites with the Figure-4 scheduler — now driven through a *named scenario*
-from ``repro.scenarios`` (simulated WAN + live dashboard).
+from ``repro.scenarios`` (simulated WAN + live dashboard).  Federation
+names run N campaigns over one shared world.
 
     PYTHONPATH=src python examples/replication_campaign.py
-        [--scenario paper-2022] [--datasets 120] [--scale 0.05]
+        [--scenario paper-2022 | --scenario federation-paper-twice]
+        [--datasets 120] [--scale 0.05]
         [--engine events|step] [--dashboard]
 
 Watch for the paper's phases: LLNL->ALCF primary flow, re-route to OLCF
 during ALCF maintenance, ALCF->OLCF relay traffic, permission-failure
-quarantine + human fix, and termination with all replicas complete.
+quarantine + human fix, and termination with all replicas complete — or,
+for a federation, two campaigns contending for the same source egress.
 """
 import argparse
 import os
@@ -16,30 +19,17 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.dashboard import render_text
+from repro.core.campaign import FederationReport
+from repro.core.dashboard import render_federation_text, render_text
 from repro.core.pause import DAY
 from repro.scenarios.events import run_world
-from repro.scenarios.registry import get_scenario, list_scenarios
+from repro.scenarios.registry import (get_scenario, list_federations,
+                                      list_scenarios)
+from repro.scenarios.spec import FederationWorld
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scenario", default="paper-2022",
-                    help=f"one of: {', '.join(list_scenarios())}")
-    ap.add_argument("--datasets", type=int, default=120)
-    ap.add_argument("--scale", type=float, default=0.05)
-    ap.add_argument("--engine", choices=("events", "step"), default="events")
-    ap.add_argument("--dashboard", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    spec = get_scenario(args.scenario)
-    print(f"# {spec.name}: {spec.description}\n")
-    world = spec.build(scale=args.scale, seed=args.seed,
-                       n_datasets=args.datasets)
-    total = sum(d.bytes for d in world.catalog.values())
-    state = {"day_printed": -1, "fixed_seen": set()}
-
+def _observer(world, args, total, state):
+    """Single-campaign progress printer (the original example view)."""
     def observer(world, now):
         for ds, ok in world.notifier.fixed.items():
             if ok and ds not in state["fixed_seen"]:
@@ -51,7 +41,7 @@ def main():
         state["day_printed"] = day
         if args.dashboard:
             print(render_text(world.table, list(world.cfg.replicas), total,
-                              now))
+                              now, campaign=world.spec.name))
             return
         done_by = {r: len(world.table.succeeded_set(r))
                    for r in world.cfg.replicas}
@@ -63,10 +53,64 @@ def main():
                           for r, n in done_by.items())
               + f"  [{paused}]"
               f"  notifications={len(world.notifier.notifications)}")
+    return observer
+
+
+def _federation_observer(args, state):
+    """Per-member progress rows, side by side."""
+    def observer(world, now):
+        day = int(now / DAY)
+        if day == state["day_printed"] or day % 2:
+            return
+        state["day_printed"] = day
+        if args.dashboard:
+            print(render_federation_text(world, now))
+            return
+        parts = []
+        for rt in world.runtimes:
+            done = {r: len(rt.table.succeeded_set(r))
+                    for r in rt.cfg.replicas}
+            parts.append(f"{rt.label} " + "/".join(
+                f"{r}:{n}" for r, n in done.items()))
+        print(f"[day {day:3d}] " + "  ".join(parts))
+    return observer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="paper-2022",
+                    help="one of: "
+                         f"{', '.join(list_scenarios() + list_federations())}")
+    ap.add_argument("--datasets", type=int, default=120)
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--engine", choices=("events", "step"), default="events")
+    ap.add_argument("--dashboard", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = get_scenario(args.scenario)
+    print(f"# {spec.name}: {spec.description}\n")
+    world = spec.build(scale=args.scale, seed=args.seed,
+                       n_datasets=args.datasets)
+    state = {"day_printed": -1, "fixed_seen": set()}
+    if isinstance(world, FederationWorld):
+        observer = _federation_observer(args, state)
+    else:
+        total = sum(d.bytes for d in world.catalog.values())
+        observer = _observer(world, args, total, state)
 
     rep = run_world(world, engine=args.engine, on_iteration=observer)
-    print(f"\ncampaign finished in {rep.duration_days:.1f} simulated days "
-          f"(floor {rep.floor_days:.1f} d); done={world.sched.done()}")
+    if isinstance(rep, FederationReport):
+        print(f"\nfederation finished: span {rep.span_days:.1f} simulated "
+              "days")
+        for label, m in rep.members.items():
+            print(f"  {label:12} started day {rep.started_day[label]:6.1f}  "
+                  f"finished day {rep.finished_day[label]:6.1f}  "
+                  f"faults={m.faults_total}")
+    else:
+        print(f"\ncampaign finished in {rep.duration_days:.1f} simulated "
+              f"days (floor {rep.floor_days:.1f} d); "
+              f"done={world.sched.done()}")
 
 
 if __name__ == "__main__":

@@ -60,13 +60,27 @@ class CampaignReport:
     quarantined: int
 
 
+@dataclass
+class FederationReport:
+    """Aggregate outcome of N concurrent campaigns driven over one shared
+    simulated world (``repro.scenarios.spec.FederationSpec``).  ``members``
+    preserves member order; each member's ``duration_days`` is the absolute
+    simulation day it finished (stagger included)."""
+    members: Dict[str, CampaignReport]       # label -> per-campaign report
+    started_day: Dict[str, float]            # label -> scheduled start day
+    finished_day: Dict[str, float]           # label -> completion/timeout day
+    span_days: float                         # last member's finish day
+
+
 def build_campaign(cfg: CampaignConfig, *,
                    graph: Optional[RouteGraph] = None,
                    pause: Optional[PauseManager] = None,
                    injector: Optional[FaultInjector] = None,
                    retry: Optional[RetryPolicy] = None,
                    max_active_per_route: int = 2,
-                   table: Optional[TransferTable] = None):
+                   table: Optional[TransferTable] = None,
+                   transport: Optional[SimulatedTransport] = None,
+                   notifier: Optional[Notifier] = None):
     """Wire up catalog, sites, calendar, transport, table, scheduler.
 
     The keyword overrides let a ``repro.scenarios.spec.ScenarioSpec`` compile
@@ -74,6 +88,14 @@ def build_campaign(cfg: CampaignConfig, *,
     wiring; with no overrides this reproduces the paper's 2022 campaign.
     ``table`` accepts a pre-populated transfer table (checkpoint resume); the
     populate pass then inserts nothing, because every row already exists.
+
+    ``transport`` attaches this campaign to an existing (shared) transport
+    instead of constructing its own — the federation path, where N campaign
+    runtimes contend through one ``SimulatedTransport``'s fair-share rate
+    allocator.  The shared transport's clock/pause/injector are then
+    authoritative; ``notifier`` is the *campaign's* notifier (the scheduler's
+    quarantine notifications go there), which may differ from the transport's
+    routing notifier.
     """
     if graph is None:
         graph = paper_route_graph()
@@ -95,7 +117,9 @@ def build_campaign(cfg: CampaignConfig, *,
     for p in rng.choice(paths, size=n_bad, replace=False):
         catalog[p].unreadable = True
 
-    clock = SimClock(0.0)
+    clock = transport.clock if transport is not None else SimClock(0.0)
+    if pause is None and transport is not None:
+        pause = transport.pause
     if pause is None:
         pause = PauseManager()
         # OLCF offline until its DTN comes up (phase 1)
@@ -109,12 +133,15 @@ def build_campaign(cfg: CampaignConfig, *,
         # occasional OLCF maintenance
         pause.add_weekly("OLCF", 40 * DAY, 12 * 3600.0, cfg.max_days * DAY)
 
-    if injector is None:
+    if injector is None and transport is None:
         injector = FaultInjector(seed=cfg.seed)
-    notifier = Notifier()
+    if notifier is None:
+        notifier = Notifier()
     if retry is None:
         retry = RetryPolicy(max_retries=8, backoff_s=3600.0)
-    transport = SimulatedTransport(graph, clock, pause, injector, notifier, retry)
+    if transport is None:
+        transport = SimulatedTransport(graph, clock, pause, injector,
+                                       notifier, retry)
     if table is None:
         table = TransferTable()
     sched = ReplicationScheduler(

@@ -1,17 +1,23 @@
-"""Replication dashboard (paper Fig. 7): live view of the transfer table.
+"""Replication dashboard (paper Fig. 7): live view of the transfer tables.
 
-Renders, per destination, the ACTIVE / PAUSED transfers and the most recent
-SUCCEEDED ones, plus campaign totals — as text (terminal) or JSON (for a web
-front end).  The paper notes such a dashboard was "relatively easy to create"
-and valuable for progress communication and spotting failures; here it is a
-first-class feature.
+Renders a progress table with one row per (campaign, destination) —
+complete fraction, bytes, files, faults, live transfer count, aggregate
+rate, and ETA — side by side across however many campaigns share the world,
+followed (in the detailed view) by the ACTIVE / PAUSED transfers and the
+most recent SUCCEEDED ones per destination.  The paper notes such a
+dashboard was "relatively easy to create" and valuable for progress
+communication and spotting failures; here it is a first-class feature that
+covers federated campaigns too.
 """
 from __future__ import annotations
 
 import json
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.transfer_table import Status, TransferRecord, TransferTable
+
+# one campaign's dashboard identity: (label, table, destinations, total bytes)
+CampaignEntry = Tuple[str, TransferTable, List[str], int]
 
 
 def _fmt_bytes(n: float) -> str:
@@ -26,9 +32,92 @@ def _fmt_rate(bps: float) -> str:
     return _fmt_bytes(bps) + "/s"
 
 
+def _fmt_eta(days: float) -> str:
+    if days == 0.0:
+        return "done"
+    if days == float("inf"):
+        return "stalled"
+    return f"{days:.1f} d"
+
+
+# ------------------------------------------------------------- progress rows
+def progress_rows(campaigns: Sequence[CampaignEntry]) -> List[Dict]:
+    """One row per (campaign, destination): landed bytes/files/faults, the
+    live transfer count, the current aggregate achieved rate, and the ETA at
+    that rate.  This is the side-by-side federation view — pass one entry
+    per campaign sharing the world."""
+    rows: List[Dict] = []
+    for label, table, destinations, total_bytes in campaigns:
+        for dst in destinations:
+            done = table.by_status(Status.SUCCEEDED, destination=dst)
+            live = table.by_status(Status.ACTIVE, Status.QUEUED,
+                                   Status.PAUSED, destination=dst)
+            # faults count every row's accumulated faults — including rows
+            # waiting out a retry backoff or quarantined — so the column is
+            # monotonic and ends equal to the report's faults_total
+            other = table.by_status(Status.FAILED, Status.QUARANTINED,
+                                    destination=dst)
+            got = table.bytes_at(dst)
+            files = sum(r.files for r in done)
+            faults = sum(r.faults for r in done + live + other)
+            rate = sum(r.rate for r in live if r.status == Status.ACTIVE)
+            remaining = max(0, total_bytes - got)
+            if remaining == 0:
+                eta_days = 0.0
+            elif rate > 0:
+                eta_days = remaining / rate / 86400.0
+            else:
+                eta_days = float("inf")
+            rows.append({
+                "campaign": label,
+                "destination": dst,
+                "complete_fraction": (got / total_bytes
+                                      if total_bytes else 0.0),
+                "bytes": got,
+                "files": files,
+                "faults": faults,
+                "active": len(live),
+                "rate": rate,
+                "eta_days": eta_days,
+            })
+    return rows
+
+
+def _render_rows(rows: Sequence[Dict], now: float) -> str:
+    lines = [f"=== Replication progress @ t={now/86400:.2f} d ===",
+             f"{'Campaign':16} {'Dest':6} {'Done':>6} {'Bytes':>10} "
+             f"{'Files':>9} {'Faults':>6} {'Live':>4} {'Rate':>12} {'ETA':>8}"]
+    for r in rows:
+        lines.append(
+            f"{r['campaign'][:16]:16} {r['destination']:6} "
+            f"{r['complete_fraction']*100:5.1f}% "
+            f"{_fmt_bytes(r['bytes']):>10} {r['files']:>9} "
+            f"{r['faults']:>6} {r['active']:>4} "
+            f"{_fmt_rate(r['rate']):>12} {_fmt_eta(r['eta_days']):>8}")
+    return "\n".join(lines)
+
+
+def render_progress(campaigns: Sequence[CampaignEntry], now: float) -> str:
+    """The progress table as text: campaigns/destinations side by side."""
+    return _render_rows(progress_rows(campaigns), now)
+
+
+def render_federation_text(world, now: float) -> str:
+    """Progress table for a compiled ``FederationWorld``: one row per
+    (member campaign, destination)."""
+    campaigns = [(rt.label, rt.table, list(rt.cfg.replicas),
+                  sum(d.bytes for d in rt.catalog.values()))
+                 for rt in world.runtimes]
+    return render_progress(campaigns, now)
+
+
+# ----------------------------------------------------------- detailed views
 def snapshot(table: TransferTable, destinations: List[str],
-             total_bytes: int, now: float, n_recent: int = 4) -> Dict:
-    out: Dict = {"now": now, "destinations": {}}
+             total_bytes: int, now: float, n_recent: int = 4,
+             campaign: str = "campaign") -> Dict:
+    out: Dict = {"now": now, "destinations": {},
+                 "progress": progress_rows(
+                     [(campaign, table, destinations, total_bytes)])}
     for dst in destinations:
         live = table.by_status(Status.ACTIVE, Status.PAUSED, destination=dst)
         done = table.by_status(Status.SUCCEEDED, destination=dst)
@@ -54,14 +143,18 @@ def _row(r: TransferRecord) -> Dict:
 
 
 def render_text(table: TransferTable, destinations: List[str],
-                total_bytes: int, now: float) -> str:
-    snap = snapshot(table, destinations, total_bytes, now)
-    lines = [f"=== Replication dashboard @ t={now/86400:.2f} d ==="]
+                total_bytes: int, now: float,
+                campaign: str = "campaign") -> str:
+    snap = snapshot(table, destinations, total_bytes, now, campaign=campaign)
+    by_dst = {r["destination"]: r for r in snap["progress"]}
+    lines = [_render_rows(snap["progress"], now)]
     for dst, info in snap["destinations"].items():
+        prog = by_dst[dst]
         lines.append(f"\nReplication to {dst}  "
                      f"[{info['complete_fraction']*100:5.1f}% — "
                      f"{_fmt_bytes(info['bytes'])} | "
-                     f"{info['succeeded']} datasets]")
+                     f"{info['succeeded']} datasets | "
+                     f"ETA {_fmt_eta(prog['eta_days'])}]")
         lines.append(f"{'No':>3} {'Dataset':54} {'From':5} {'Status':12} "
                      f"{'Files':>9} {'Bytes':>10} {'Faults':>6} {'Rate':>12}")
         for i, r in enumerate(info["rows"], 1):

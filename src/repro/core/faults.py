@@ -117,3 +117,38 @@ class Notifier:
     def load_state_dict(self, d: dict) -> None:
         self.notifications = list(d["notifications"])
         self.fixed = {k: bool(v) for k, v in d["fixed"].items()}
+
+
+class FederationNotifier:
+    """Routes a shared transport's notifications to the campaign(s) that own
+    the dataset, and treats human fixes as global.
+
+    When N campaigns share one ``SimulatedTransport``, a permission failure
+    or scan OOM raised by a mover must land in the owning campaign's
+    ``Notifier`` (that is where its human-fix clock and report live).  A
+    dataset replicated by several campaigns (the paper moved the same 29 M
+    files twice) notifies each of them — and once any campaign's admin fixes
+    the underlying problem at the source, ``is_fixed`` unblocks every
+    campaign's transfers: permissions are repaired once, not per campaign.
+
+    Stateless by design: each member ``Notifier`` checkpoints itself, so this
+    router needs no snapshot entry.  With a single member it is a transparent
+    pass-through (the bit-identity anchor for 1-element federations).
+    """
+
+    def __init__(self):
+        self._members: List[tuple] = []      # (catalog dict, Notifier)
+
+    def attach(self, catalog: Dict[str, object], notifier: "Notifier") -> None:
+        self._members.append((catalog, notifier))
+
+    def notify(self, msg: str, dataset: str = "") -> None:
+        targets = [n for cat, n in self._members
+                   if dataset and dataset in cat]
+        if not targets:                      # unattributable: tell everyone
+            targets = [n for _, n in self._members]
+        for n in targets:
+            n.notify(msg, dataset)
+
+    def is_fixed(self, dataset: str) -> bool:
+        return any(n.is_fixed(dataset) for _, n in self._members)

@@ -112,6 +112,21 @@ class ReplicationScheduler:
     def done(self) -> bool:                                       # 2f
         return self.table.done()
 
+    def teardown(self) -> int:
+        """Cancel every transfer this scheduler still has in flight
+        (slot-occupying rows), releasing their route/site fair shares to
+        whoever else is using the transport — the shutdown path a federated
+        campaign takes when it ends (completes or times out) while other
+        campaigns keep running.  The table rows are left as they are: the
+        report shows exactly how far the campaign got.  Returns the number
+        of transfers cancelled."""
+        n = 0
+        for rec in self.table.by_status(*OCCUPYING):
+            if rec.uuid is not None:
+                self.transport.cancel(rec.uuid)
+                n += 1
+        return n
+
     # ----------------------------------------------------- incremental state
     def _on_row(self, rec: TransferRecord, old_status: Optional[Status],
                 old_source: Optional[str]) -> None:
@@ -180,6 +195,9 @@ class ReplicationScheduler:
                 retries = rec.retries + 1
                 if retries > self.retry.max_retries:
                     upd.update(status=Status.QUARANTINED, retries=retries)
+                    # release any transport-side residue of the quarantined
+                    # transfer (no-op for transports whose FAILED is terminal)
+                    self.transport.cancel(rec.uuid)
                     self.notifier.notify(
                         f"transfer {rec.dataset} -> {rec.destination} exceeded "
                         f"{self.retry.max_retries} retries ({st.detail})",

@@ -41,6 +41,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 from repro.core.transfer_table import Status, TransferTable
 
 SNAPSHOT_VERSION = 1
+FEDERATION_SNAPSHOT_VERSION = 1
+FEDERATION_KIND = "federation"
 SNAPSHOT_PREFIX = "snapshot-"
 TABLE_PREFIX = "table-"
 LATEST_FILE = "LATEST"
@@ -76,6 +78,16 @@ class LoopState:
     timeline: List[Tuple[float, Dict[str, int]]] = field(default_factory=list)
     pending_top_ups: Set[str] = field(default_factory=set)
     feed_cursor: int = 0
+
+
+@dataclass
+class FederationLoopState:
+    """The federated run loop's mutable state: one ``LoopState`` per member
+    runtime plus the shared iteration counter and each member's completion
+    time (``None`` while it is still running)."""
+    iterations: int = 0
+    members: List[LoopState] = field(default_factory=list)
+    finished_at: List[Optional[float]] = field(default_factory=list)
 
 
 @dataclass
@@ -136,6 +148,73 @@ class CampaignSnapshot:
 
     @classmethod
     def loads(cls, text: str) -> "CampaignSnapshot":
+        return cls.from_dict(json.loads(text))
+
+
+@dataclass
+class FederationSnapshot:
+    """Versioned, JSON-serializable image of a federated run: the shared
+    substrate's state (clock, fault RNG, transport) once, plus one runtime
+    block per member campaign (scheduler queues, notifier, loop cursors, and
+    the name of its sibling sqlite table copy).  Discriminated from a
+    single-campaign ``CampaignSnapshot`` by ``kind == "federation"``."""
+    version: int
+    kind: str
+    federation: str               # registry name used to rebuild the world
+    engine: str                   # "events" | "step"
+    scale: float
+    seed: int
+    n_datasets: Optional[int]
+    clock_now: float
+    iterations: int
+    injector: dict                # FaultInjector.state_dict()
+    transport: dict               # SimulatedTransport.state_dict()
+    finished_at: List[Optional[float]]
+    runtimes: List[dict]          # per-member blocks, member order
+
+    # ------------------------------------------------------------- serialize
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FederationSnapshot":
+        if d.get("kind") != FEDERATION_KIND:
+            raise SnapshotError(
+                f"not a federation snapshot (kind={d.get('kind')!r})")
+        version = d.get("version")
+        if version != FEDERATION_SNAPSHOT_VERSION:
+            raise SnapshotVersionError(
+                f"federation snapshot version {version!r} is not supported "
+                f"(this build reads version {FEDERATION_SNAPSHOT_VERSION}); "
+                "re-run the campaign or use the writing build to resume")
+        kw = dict(d)
+        kw["finished_at"] = [None if f is None else float(f)
+                             for f in d["finished_at"]]
+        kw["runtimes"] = [dict(r) for r in d["runtimes"]]
+        names = {f.name for f in dataclasses.fields(cls)}
+        extra = set(kw) - names
+        if extra:
+            raise SnapshotError(f"unknown snapshot fields: {sorted(extra)}")
+        missing = names - set(kw)
+        if missing:
+            raise SnapshotError(f"missing snapshot fields: {sorted(missing)}")
+        _RUNTIME_KEYS = {"label", "scenario", "start_day", "table_file",
+                         "scheduler", "notifier", "fix_at", "next_snap_day",
+                         "timeline", "pending_top_ups", "feed_cursor",
+                         "incremental_last_check", "admitted_top_ups"}
+        for r in kw["runtimes"]:
+            if set(r) != _RUNTIME_KEYS:
+                raise SnapshotError(
+                    f"malformed runtime block for "
+                    f"{r.get('label', '?')!r}: fields "
+                    f"{sorted(set(r) ^ _RUNTIME_KEYS)} unexpected/missing")
+        return cls(**kw)
+
+    @classmethod
+    def loads(cls, text: str) -> "FederationSnapshot":
         return cls.from_dict(json.loads(text))
 
 
@@ -210,9 +289,120 @@ def apply_snapshot(world, snap: CampaignSnapshot) -> LoopState:
         feed_cursor=snap.feed_cursor)
 
 
+# -------------------------------------------------------- federation capture
+def _capture_runtime(rt, ls: LoopState, table_file: str) -> dict:
+    """One member campaign's snapshot block (the table itself lives in the
+    sibling sqlite file named by ``table_file``)."""
+    feed_events = (rt.incremental.feed.all_events()
+                   if rt.incremental is not None else [])
+    return {
+        "label": rt.label,
+        "scenario": rt.spec.name,
+        "start_day": rt.start_day,
+        "table_file": table_file,
+        "scheduler": rt.sched.state_dict(),
+        "notifier": rt.notifier.state_dict(),
+        "fix_at": dict(ls.fix_at),
+        "next_snap_day": ls.next_snap_day,
+        "timeline": [(t, dict(b)) for t, b in ls.timeline],
+        "pending_top_ups": sorted(ls.pending_top_ups),
+        "feed_cursor": ls.feed_cursor,
+        "incremental_last_check": (rt.incremental._last_check
+                                   if rt.incremental is not None else 0.0),
+        "admitted_top_ups": sorted(d.path for _, d in feed_events
+                                   if d.path in rt.catalog),
+    }
+
+
+def capture_federation_snapshot(world, loop: "FederationLoopState",
+                                engine: str,
+                                table_files: Sequence[str]
+                                ) -> FederationSnapshot:
+    """Snapshot a ``FederationWorld`` at a run-loop boundary: the shared
+    clock/RNG/transport once, one block per member runtime."""
+    pollable = set()
+    for rt in world.runtimes:
+        pollable.update(
+            rec.uuid
+            for rec in rt.table.by_status(Status.ACTIVE, Status.QUEUED,
+                                          Status.PAUSED)
+            if rec.uuid is not None)
+    return FederationSnapshot(
+        version=FEDERATION_SNAPSHOT_VERSION,
+        kind=FEDERATION_KIND,
+        federation=world.spec.name,
+        engine=engine,
+        scale=world.scale,
+        seed=world.seed,
+        n_datasets=world.n_datasets,
+        clock_now=world.shared.clock.now,
+        iterations=loop.iterations,
+        injector=world.shared.transport.injector.state_dict(),
+        transport=world.shared.transport.state_dict(archive_uids=pollable),
+        finished_at=list(loop.finished_at),
+        runtimes=[_capture_runtime(rt, ls, tf)
+                  for rt, ls, tf in zip(world.runtimes, loop.members,
+                                        table_files)],
+    )
+
+
+def _apply_runtime(rt, block: dict) -> LoopState:
+    """Overwrite one freshly built member runtime's mutable state with its
+    snapshot block; returns the member's loop state."""
+    if block["scenario"] != rt.spec.name or block["label"] != rt.label:
+        raise SnapshotError(
+            f"snapshot member {block['label']!r} ({block['scenario']!r}) "
+            f"does not match built runtime {rt.label!r} ({rt.spec.name!r})")
+    if rt.incremental is not None:
+        by_path = {d.path: d for _, d in rt.incremental.feed.all_events()}
+        for p in block["admitted_top_ups"]:
+            rt.catalog[p] = by_path[p]   # before live movers re-bind
+        rt.incremental._last_check = block["incremental_last_check"]
+    elif block["admitted_top_ups"]:
+        raise SnapshotError(f"member {rt.label!r} snapshot has top-ups but "
+                            "the scenario has no incremental feed")
+    rt.notifier.load_state_dict(block["notifier"])
+    rt.sched.load_state_dict(block["scheduler"])
+    return LoopState(
+        iterations=0,
+        fix_at=dict(block["fix_at"]),
+        next_snap_day=block["next_snap_day"],
+        timeline=[(float(t), {k: int(v) for k, v in b.items()})
+                  for t, b in block["timeline"]],
+        pending_top_ups=set(block["pending_top_ups"]),
+        feed_cursor=block["feed_cursor"])
+
+
+def apply_federation_snapshot(world, snap: FederationSnapshot
+                              ) -> "FederationLoopState":
+    """Overwrite a freshly built ``FederationWorld``'s mutable state with the
+    snapshot's.  Returns the loop state to resume with."""
+    if snap.federation != world.spec.name:
+        raise SnapshotError(
+            f"snapshot is for federation {snap.federation!r}, world is "
+            f"{world.spec.name!r}")
+    if len(snap.runtimes) != len(world.runtimes):
+        raise SnapshotError(
+            f"snapshot has {len(snap.runtimes)} member runtimes, world has "
+            f"{len(world.runtimes)}")
+    members = [_apply_runtime(rt, block)
+               for rt, block in zip(world.runtimes, snap.runtimes)]
+    world.shared.clock.now = snap.clock_now
+    world.shared.transport.injector.load_state_dict(snap.injector)
+    world.shared.transport.load_state_dict(snap.transport,
+                                           world.merged_catalog())
+    return FederationLoopState(
+        iterations=snap.iterations,
+        members=members,
+        finished_at=[None if f is None else float(f)
+                     for f in snap.finished_at])
+
+
 # --------------------------------------------------------------------- loading
-def load_snapshot(ckpt_dir: str) -> CampaignSnapshot:
-    """The newest complete snapshot in ``ckpt_dir`` (via ``LATEST``)."""
+def load_snapshot(ckpt_dir: str):
+    """The newest complete snapshot in ``ckpt_dir`` (via ``LATEST``): a
+    ``CampaignSnapshot`` or, for federated runs, a ``FederationSnapshot``
+    (discriminated by the JSON ``kind`` field)."""
     latest = os.path.join(ckpt_dir, LATEST_FILE)
     if not os.path.exists(latest):
         raise SnapshotError(f"no {LATEST_FILE} in {ckpt_dir!r} — not a "
@@ -220,7 +410,10 @@ def load_snapshot(ckpt_dir: str) -> CampaignSnapshot:
     with open(latest) as f:
         name = f.read().strip()
     with open(os.path.join(ckpt_dir, name)) as f:
-        return CampaignSnapshot.loads(f.read())
+        d = json.loads(f.read())
+    if d.get("kind") == FEDERATION_KIND:
+        return FederationSnapshot.from_dict(d)
+    return CampaignSnapshot.from_dict(d)
 
 
 def resume_world(ckpt_dir: str, spec=None):
@@ -230,8 +423,20 @@ def resume_world(ckpt_dir: str, spec=None):
     ``run_world(world, engine=snapshot.engine, resume=loop_state)``.  The
     checkpoint files are read, never mutated — resume as many times as you
     like.  ``spec`` overrides registry lookup (tests with ad-hoc specs).
+    Federation snapshots rebuild a ``FederationWorld`` over every member's
+    restored table.
     """
     snap = load_snapshot(ckpt_dir)
+    if isinstance(snap, FederationSnapshot):
+        if spec is None:
+            from repro.scenarios.registry import get_scenario
+            spec = get_scenario(snap.federation)
+        tables = [TransferTable.load(os.path.join(ckpt_dir, r["table_file"]))
+                  for r in snap.runtimes]
+        world = spec.build(scale=snap.scale, seed=snap.seed,
+                           n_datasets=snap.n_datasets, tables=tables)
+        loop = apply_federation_snapshot(world, snap)
+        return world, snap, loop
     if spec is None:
         from repro.scenarios.registry import get_scenario
         spec = get_scenario(snap.scenario)
@@ -301,14 +506,26 @@ class Checkpointer:
         if kill:
             raise CampaignKilled(self.directory, it)
 
-    def write(self, world, loop: LoopState, engine: str) -> str:
-        """One atomic checkpoint epoch; returns the snapshot filename."""
+    def write(self, world, loop, engine: str) -> str:
+        """One atomic checkpoint epoch; returns the snapshot filename.
+        Accepts a single-campaign world (``LoopState``) or a federation
+        (``FederationLoopState``); a federation epoch dumps one sqlite table
+        copy per member runtime next to one shared snapshot."""
         t0 = time.time()
         os.makedirs(self.directory, exist_ok=True)
         it = loop.iterations
-        table_file = f"{TABLE_PREFIX}{it:08d}.sqlite"
-        world.table.dump(os.path.join(self.directory, table_file))
-        snap = capture_snapshot(world, loop, engine, table_file)
+        if hasattr(world, "runtimes"):      # federation
+            table_files = []
+            for i, rt in enumerate(world.runtimes):
+                tf = f"{TABLE_PREFIX}{it:08d}-m{i}.sqlite"
+                rt.table.dump(os.path.join(self.directory, tf))
+                table_files.append(tf)
+            snap = capture_federation_snapshot(world, loop, engine,
+                                               table_files)
+        else:
+            table_files = [f"{TABLE_PREFIX}{it:08d}.sqlite"]
+            world.table.dump(os.path.join(self.directory, table_files[0]))
+            snap = capture_snapshot(world, loop, engine, table_files[0])
         text = snap.dumps()
         snap_file = f"{SNAPSHOT_PREFIX}{it:08d}.json"
         _atomic_write_text(os.path.join(self.directory, snap_file), text)
@@ -320,18 +537,22 @@ class Checkpointer:
         self._gc()
         self.writes += 1
         self.write_s += time.time() - t0
-        self.last_bytes = (
-            len(text)
-            + os.path.getsize(os.path.join(self.directory, table_file)))
+        self.last_bytes = len(text) + sum(
+            os.path.getsize(os.path.join(self.directory, tf))
+            for tf in table_files)
         return snap_file
 
     def _gc(self) -> None:
-        """Drop all but the newest ``keep`` complete epochs."""
-        snaps = sorted(f for f in os.listdir(self.directory)
+        """Drop all but the newest ``keep`` complete epochs (every table
+        copy of an epoch shares the snapshot's iteration stem)."""
+        entries = os.listdir(self.directory)
+        snaps = sorted(f for f in entries
                        if f.startswith(SNAPSHOT_PREFIX) and f.endswith(".json"))
         for old in snaps[:-self.keep]:
             stem = old[len(SNAPSHOT_PREFIX):-len(".json")]
-            for victim in (old, f"{TABLE_PREFIX}{stem}.sqlite"):
+            victims = [old] + [f for f in entries
+                               if f.startswith(f"{TABLE_PREFIX}{stem}")]
+            for victim in victims:
                 try:
                     os.remove(os.path.join(self.directory, victim))
                 except OSError:  # pragma: no cover - best-effort cleanup
@@ -364,4 +585,24 @@ def trajectory_summary(report, stats, table: TransferTable) -> dict:
         "quarantined": report.quarantined,
         "bytes_at": {k: int(v) for k, v in report.bytes_at.items()},
         "succeeded_digest": succeeded_digest(table),
+    }
+
+
+def federation_trajectory_summary(report, stats, world) -> dict:
+    """The federated bit-identity tuple: shared iteration count and span plus
+    every member campaign's own trajectory summary (digest included)."""
+    return {
+        "iterations": stats.iterations,
+        "span_days": report.span_days,
+        "members": {
+            rt.label: {
+                "sim_days": report.members[rt.label].duration_days,
+                "faults_total": report.members[rt.label].faults_total,
+                "quarantined": report.members[rt.label].quarantined,
+                "bytes_at": {k: int(v) for k, v in
+                             report.members[rt.label].bytes_at.items()},
+                "succeeded_digest": succeeded_digest(rt.table),
+            }
+            for rt in world.runtimes
+        },
     }

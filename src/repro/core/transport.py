@@ -68,8 +68,10 @@ class Transport(abc.ABC):
     @abc.abstractmethod
     def poll(self, uid: str) -> TransferState: ...
 
-    def cancel(self, uid: str) -> None:  # pragma: no cover - optional
-        pass
+    def cancel(self, uid: str) -> None:
+        """Abort an in-flight transfer, releasing whatever capacity it holds.
+        Cancelling an unknown or already-terminal uid is a no-op; the final
+        state of a cancelled transfer must remain pollable."""
 
 
 # ================================================================= simulation
@@ -136,6 +138,20 @@ class SimulatedTransport(Transport):
         if done is not None:
             return done
         return self._state_of(self._live[uid])
+
+    def cancel(self, uid: str) -> None:
+        """Evict a live transfer to the archive as FAILED/"cancelled".  The
+        mover immediately stops occupying its route/site fair share (the next
+        ``_route_rates`` no longer counts it), which is how a campaign ending
+        early hands its bandwidth back to the survivors.  No-op for archived
+        or unknown uids, so terminal transfers stay pollable unchanged."""
+        x = self._live.pop(uid, None)
+        if x is None:
+            return
+        x.status = Status.FAILED
+        x.detail = "cancelled"
+        x.completed_at = self.clock.now
+        self._archive[uid] = self._state_of(x)
 
     @staticmethod
     def _state_of(x: _SimXfer) -> TransferState:

@@ -23,9 +23,18 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.snapshot import (CampaignKilled, Checkpointer, resume_world,
+from repro.core.snapshot import (CampaignKilled, Checkpointer,
+                                 federation_trajectory_summary, resume_world,
                                  trajectory_summary)
 from repro.scenarios.events import EngineStats, run_world
+
+
+def summarize_trajectory(world, report, stats: EngineStats) -> Dict:
+    """The bit-identity tuple for either world kind: per-member summaries
+    for a federation, the single-campaign summary otherwise."""
+    if hasattr(world, "runtimes"):
+        return federation_trajectory_summary(report, stats, world)
+    return trajectory_summary(report, stats, world.table)
 
 
 @dataclass(frozen=True)
@@ -55,7 +64,7 @@ def run_crash_resume(spec: CrashResumeSpec, workdir: str,
     world = base.build(scale=scale, seed=seed, n_datasets=n_datasets)
     ref_stats = EngineStats()
     ref_report = run_world(world, engine=spec.engine, stats=ref_stats)
-    reference = trajectory_summary(ref_report, ref_stats, world.table)
+    reference = summarize_trajectory(world, ref_report, ref_stats)
 
     # the kill schedule in absolute iterations, strictly inside the run
     total = ref_stats.iterations
@@ -81,7 +90,7 @@ def run_crash_resume(spec: CrashResumeSpec, workdir: str,
     else:
         # act 3: final resume runs to completion
         report = run_world(world, engine=spec.engine, stats=stats, resume=loop)
-    resumed = trajectory_summary(report, stats, world.table)
+    resumed = summarize_trajectory(world, report, stats)
 
     return {
         "scenario": spec.name,
@@ -123,7 +132,15 @@ CRASH_RESUME_STEP = CrashResumeSpec(
                 "determinism must not depend on the event engine.",
     base="paper-2022", kill_fracs=(0.5,), engine="step")
 
+CRASH_RESUME_FEDERATION = CrashResumeSpec(
+    name="crash-resume-federation",
+    description="Kill the overlapped two-campaign federation at ~50%: the "
+                "shared clock/RNG/transport plus every member's scheduler "
+                "and table must resume to identical per-member digests.",
+    base="federation-paper-twice", kill_fracs=(0.5,))
+
 CRASH_RESUME_SCENARIOS: Dict[str, CrashResumeSpec] = {
     s.name: s for s in (CRASH_RESUME_PAPER, CRASH_RESUME_STORM,
-                        CRASH_RESUME_TOPUP, CRASH_RESUME_STEP)
+                        CRASH_RESUME_TOPUP, CRASH_RESUME_STEP,
+                        CRASH_RESUME_FEDERATION)
 }

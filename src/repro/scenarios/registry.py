@@ -13,8 +13,10 @@ from typing import Dict, List
 
 from repro.scenarios.crash_resume import (CRASH_RESUME_SCENARIOS,
                                           CrashResumeSpec)
-from repro.scenarios.spec import (CatalogSpec, FaultProfileSpec, OutageSpec,
-                                  RouteSpec, ScenarioSpec, SiteSpec, TopUpSpec)
+from repro.scenarios.spec import (CatalogSpec, FaultProfileSpec,
+                                  FederationMemberSpec, FederationSpec,
+                                  OutageSpec, RouteSpec, ScenarioSpec,
+                                  SiteSpec, TopUpSpec)
 
 # --------------------------------------------------------------- paper sites
 _LLNL = SiteSpec("LLNL", read_gbps=1.5, write_gbps=1.5,
@@ -163,10 +165,85 @@ MEGA_CAMPAIGN = ScenarioSpec(
     max_days=400.0)
 
 
+# ------------------------------------------------------ federation scenarios
+# The paper's actual regime: the 29M-file catalog was moved TWICE — to ANL
+# and to ORNL — as two overlapping campaigns contending for the same
+# ~1.5 GB/s source file system.  Each half below is a complete
+# single-destination campaign; the federation family runs them over one
+# shared world (one clock/transport/LLNL read cap).
+PAPER_TO_ALCF = ScenarioSpec(
+    name="paper-to-alcf",
+    description="The ALCF half of the 2022 campaign as its own campaign: "
+                "LLNL sources 7.3 PB to ALCF over the direct route only "
+                "(no inter-LCF relay), with the ALCF maintenance calendar.",
+    source="LLNL", replicas=("ALCF",),
+    sites=(_LLNL, _ALCF),
+    routes=(RouteSpec("LLNL", "ALCF", 2 * 0.648),),
+    outages=(OutageSpec("ALCF", start_day=5.0, duration_h=5 * 24.0),
+             OutageSpec("ALCF", start_day=17.0, duration_h=12.0,
+                        weekly=True)),
+    max_days=400.0)
+
+PAPER_TO_OLCF = ScenarioSpec(
+    name="paper-to-olcf",
+    description="The OLCF half of the 2022 campaign as its own campaign: "
+                "LLNL sources 7.3 PB to OLCF direct, with OLCF's late DTN "
+                "start and maintenance calendar.",
+    source="LLNL", replicas=("OLCF",),
+    sites=(_LLNL, _OLCF),
+    routes=(RouteSpec("LLNL", "OLCF", 2 * 0.662),),
+    outages=(OutageSpec("OLCF", start_day=0.0, duration_h=5 * 24.0,
+                        planned=False),
+             OutageSpec("OLCF", start_day=40.0, duration_h=12.0,
+                        weekly=True)),
+    max_days=400.0)
+
+FEDERATION_PAPER_TWICE = FederationSpec(
+    name="federation-paper-twice",
+    description="The paper moved the catalog twice: the ALCF and OLCF "
+                "pulls as two OVERLAPPED independent campaigns contending "
+                "for the shared 1.5 GB/s LLNL source — aggregate LLNL "
+                "egress stays capped at read_bw while both make progress.",
+    members=(FederationMemberSpec(PAPER_TO_ALCF, start_day=0.0,
+                                  label="alcf"),
+             FederationMemberSpec(PAPER_TO_OLCF, start_day=0.0,
+                                  label="olcf")),
+    shared_sites=("LLNL",))
+
+FEDERATION_PAPER_SERIAL = FederationSpec(
+    name="federation-paper-serial",
+    description="The serial comparator: the same two pulls back to back "
+                "(OLCF starts only after the ALCF campaign's window), so "
+                "LLNL egress is never shared — total campaign days must "
+                "LOSE to federation-paper-twice.",
+    members=(FederationMemberSpec(PAPER_TO_ALCF, start_day=0.0,
+                                  label="alcf"),
+             FederationMemberSpec(PAPER_TO_OLCF, start_day=100.0,
+                                  label="olcf")),
+    shared_sites=("LLNL",))
+
+FEDERATION_PAPER_AND_TOPUP = FederationSpec(
+    name="federation-paper-and-topup",
+    description="Mixed federation: the relay-assisted two-destination "
+                "paper campaign and an incremental top-up campaign share "
+                "one world — every site and route is contended.",
+    members=(FederationMemberSpec(PAPER_2022, start_day=0.0,
+                                  label="paper"),
+             FederationMemberSpec(INCREMENTAL_TOP_UP, start_day=2.0,
+                                  label="topup")),
+    shared_sites=("LLNL", "ALCF", "OLCF"))
+
+
 _REGISTRY: Dict[str, ScenarioSpec] = {
     s.name: s for s in (
         PAPER_2022, FOUR_SITE_MESH, DEGRADED_SOURCE, FAULT_STORM,
-        FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY, MEGA_CAMPAIGN)
+        FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY, MEGA_CAMPAIGN,
+        PAPER_TO_ALCF, PAPER_TO_OLCF)
+}
+
+_FEDERATION_REGISTRY: Dict[str, FederationSpec] = {
+    s.name: s for s in (FEDERATION_PAPER_TWICE, FEDERATION_PAPER_SERIAL,
+                        FEDERATION_PAPER_AND_TOPUP)
 }
 
 # the crash-injection family: kill/resume meta-scenarios wrapping the specs
@@ -179,28 +256,39 @@ def list_scenarios() -> List[str]:
     return sorted(_REGISTRY)
 
 
+def list_federations() -> List[str]:
+    """Names of the federated (N concurrent campaigns) scenario family."""
+    return sorted(_FEDERATION_REGISTRY)
+
+
 def list_crash_scenarios() -> List[str]:
     """Names of the crash-resume (kill/resume) scenario family."""
     return sorted(_CRASH_REGISTRY)
 
 
 def get_scenario(name: str):
-    """Look up a scenario by name: a ``ScenarioSpec``, or a
-    ``CrashResumeSpec`` for the crash-resume family."""
+    """Look up a scenario by name: a ``ScenarioSpec``, a ``FederationSpec``
+    for the federation family, or a ``CrashResumeSpec`` for the crash-resume
+    family."""
     if name in _REGISTRY:
         return _REGISTRY[name]
+    if name in _FEDERATION_REGISTRY:
+        return _FEDERATION_REGISTRY[name]
     if name in _CRASH_REGISTRY:
         return _CRASH_REGISTRY[name]
-    known = sorted(_REGISTRY) + sorted(_CRASH_REGISTRY)
+    known = (sorted(_REGISTRY) + sorted(_FEDERATION_REGISTRY)
+             + sorted(_CRASH_REGISTRY))
     raise KeyError(
         f"unknown scenario {name!r}; available: {', '.join(known)}")
 
 
 def register(spec):
-    """Add a custom scenario (tests and downstream configs); crash-resume
-    specs go into their own family registry."""
+    """Add a custom scenario (tests and downstream configs); federation and
+    crash-resume specs go into their own family registries."""
     if isinstance(spec, CrashResumeSpec):
         _CRASH_REGISTRY[spec.name] = spec
+    elif isinstance(spec, FederationSpec):
+        _FEDERATION_REGISTRY[spec.name] = spec
     else:
         _REGISTRY[spec.name] = spec
     return spec

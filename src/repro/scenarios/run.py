@@ -17,6 +17,11 @@ run deterministically at iteration N (CI's crash-resume equivalence check).
 Crash-resume family scenarios (``--scenario crash-resume-*``) run the whole
 kill/resume experiment against an uninterrupted reference and exit non-zero
 unless the trajectories match.
+
+Federation scenarios (``--scenario federation-*``) run N campaigns over one
+shared simulated world; every flag above — ``--engine``, ``--datasets``,
+``--scale``, ``--checkpoint-dir``, ``--kill-after``, ``--resume`` — works
+unchanged (checkpoints then carry one table copy per member campaign).
 """
 from __future__ import annotations
 
@@ -28,12 +33,14 @@ import tempfile
 import time
 from typing import Optional, Sequence
 
+from repro.core.campaign import FederationReport
 from repro.core.snapshot import (CampaignKilled, Checkpointer, SnapshotError,
-                                 resume_world, trajectory_summary)
+                                 federation_trajectory_summary, resume_world,
+                                 trajectory_summary)
 from repro.scenarios.crash_resume import CrashResumeSpec, run_crash_resume
 from repro.scenarios.events import EngineStats, run_world
 from repro.scenarios.registry import (get_scenario, list_crash_scenarios,
-                                      list_scenarios)
+                                      list_federations, list_scenarios)
 
 EXIT_KILLED = 3
 
@@ -59,6 +66,39 @@ def report_to_dict(rep, stats: EngineStats, wall_s: float) -> dict:
                             for k, v in sorted(rep.fault_histogram.items())},
         "quarantined": rep.quarantined,
         "notifications": len(rep.notifications),
+    }
+
+
+def _member_report_to_dict(rep) -> dict:
+    """A member campaign's slice of the federation report (no wall clock or
+    iteration counts — those are shared across the federation)."""
+    return {
+        "duration_days": round(rep.duration_days, 3),
+        "floor_days": round(rep.floor_days, 3),
+        "total_tb": round(rep.total_bytes / 1024 ** 4, 3),
+        "bytes_at": {k: int(v) for k, v in rep.bytes_at.items()},
+        "complete_at_all": all(v >= rep.total_bytes * 0.999
+                               for v in rep.bytes_at.values()),
+        "per_route_gbps": {f"{a}->{b}": round(v, 3)
+                           for (a, b), v in rep.per_route_gbps.items()},
+        "per_route_transfers": {f"{a}->{b}": v
+                                for (a, b), v in rep.per_route_transfers.items()},
+        "faults_total": rep.faults_total,
+        "quarantined": rep.quarantined,
+        "notifications": len(rep.notifications),
+    }
+
+
+def federation_report_to_dict(rep: FederationReport, stats: EngineStats,
+                              wall_s: float) -> dict:
+    return {
+        "wall_s": round(wall_s, 3),
+        "engine_iterations": stats.iterations,
+        "span_days": round(rep.span_days, 3),
+        "started_day": {k: round(v, 3) for k, v in rep.started_day.items()},
+        "finished_day": {k: round(v, 3) for k, v in rep.finished_day.items()},
+        "members": {label: _member_report_to_dict(m)
+                    for label, m in rep.members.items()},
     }
 
 
@@ -115,7 +155,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     if args.list:
-        for name in list_scenarios() + list_crash_scenarios():
+        for name in (list_scenarios() + list_federations()
+                     + list_crash_scenarios()):
             spec = get_scenario(name)
             print(f"{name:20} {spec.description}")
         return 0
@@ -175,10 +216,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                               f"--resume {killed.checkpoint_dir}"},
               args.json)
         return EXIT_KILLED
-    out = report_to_dict(rep, stats, time.time() - t0)
+    if isinstance(rep, FederationReport):
+        out = federation_report_to_dict(rep, stats, time.time() - t0)
+        out["trajectory"] = federation_trajectory_summary(rep, stats, world)
+    else:
+        out = report_to_dict(rep, stats, time.time() - t0)
+        out["trajectory"] = trajectory_summary(rep, stats, world.table)
     out["scenario"] = spec.name
     out["engine"] = engine
-    out["trajectory"] = trajectory_summary(rep, stats, world.table)
     if resumed_from is not None:
         out["resumed_from"] = resumed_from
     if checkpointer is not None:

@@ -19,10 +19,12 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.campaign import CampaignConfig, build_campaign
-from repro.core.faults import FaultInjector, RetryPolicy
+from repro.core.faults import (FaultInjector, FederationNotifier, Notifier,
+                               RetryPolicy)
 from repro.core.incremental import IncrementalReplicator, PublishFeed
 from repro.core.pause import DAY, PauseManager
 from repro.core.routes import GB, PB, Dataset, Route, RouteGraph, Site
+from repro.core.transport import SimClock, SimulatedTransport
 
 HOUR = 3600.0
 
@@ -85,9 +87,53 @@ class TopUpSpec:
 
 
 @dataclass
+class SharedWorld:
+    """The substrate N campaign runtimes attach to: one simulation clock, one
+    route graph, one transport (whose fair-share ``_route_rates`` is where
+    concurrent campaigns contend for route and site caps), one maintenance
+    calendar, and — through the transport — one fault-RNG stream."""
+    graph: RouteGraph
+    clock: SimClock
+    pause: PauseManager
+    transport: SimulatedTransport
+
+
+@dataclass
+class CampaignRuntime:
+    """One campaign's private runtime: its transfer table, Figure-4
+    scheduler, notifier, optional incremental feed, and report identity —
+    everything the driver steps per campaign, extracted from the old
+    single-campaign ``ScenarioWorld``/``run_world`` so a federation can hold
+    N of them over one ``SharedWorld``."""
+    spec: "ScenarioSpec"
+    cfg: CampaignConfig
+    catalog: Dict[str, Dataset]
+    table: object
+    sched: object
+    notifier: Notifier
+    label: str = ""
+    start_day: float = 0.0
+    incremental: Optional[IncrementalReplicator] = None
+    top_up_times: Tuple[float, ...] = ()
+
+    @property
+    def start_s(self) -> float:
+        return self.start_day * DAY
+
+    @property
+    def deadline_s(self) -> float:
+        """Absolute sim time at which this campaign times out."""
+        return self.start_day * DAY + self.cfg.max_days * DAY
+
+
+@dataclass
 class ScenarioWorld:
     """A compiled, runnable scenario: the campaign wiring plus (optionally)
-    an incremental-replication feed for mid-campaign top-ups."""
+    an incremental-replication feed for mid-campaign top-ups.
+
+    Structurally this is now a 1-element federation — ``shared`` +
+    ``runtime`` are the primary objects and the flat fields alias into them —
+    but the flat layout is kept as the single-campaign API."""
     spec: "ScenarioSpec"
     cfg: CampaignConfig
     graph: RouteGraph
@@ -105,6 +151,8 @@ class ScenarioWorld:
     scale: float = 1.0
     seed: int = 0
     n_datasets: Optional[int] = None
+    shared: Optional[SharedWorld] = None
+    runtime: Optional[CampaignRuntime] = None
 
 
 @dataclass(frozen=True)
@@ -171,6 +219,26 @@ class ScenarioSpec:
                            backoff_s=self.faults.backoff_s,
                            fault_retry_cost_s=self.faults.fault_retry_cost_s)
 
+    def _attach_top_ups(self, runtime: CampaignRuntime, scale: float) -> None:
+        """Compile the spec's top-up schedule into a publish feed wired to
+        the runtime's scheduler."""
+        if not self.top_ups:
+            return
+        feed = PublishFeed()
+        times: List[float] = []
+        for i, tu in enumerate(self.top_ups):
+            t = tu.publish_day * DAY
+            times.append(t)
+            for j in range(tu.n_datasets):
+                feed.publish(t, Dataset(
+                    path=f"/css03_data/CMIP6/TOPUP/batch-{i}/ds-{j:04d}",
+                    bytes=int(tu.bytes_each * scale) or tu.bytes_each,
+                    files=tu.files_each,
+                    directories=max(1, tu.files_each // 10)))
+        runtime.incremental = IncrementalReplicator(feed, runtime.sched,
+                                                    check_interval=DAY)
+        runtime.top_up_times = tuple(times)
+
     def build(self, scale: float = 1.0, seed: int = 0,
               n_datasets: Optional[int] = None, table=None) -> ScenarioWorld:
         """Compile the spec onto the campaign wiring, ready to run under
@@ -186,25 +254,16 @@ class ScenarioSpec:
             cfg, graph=self.build_graph(), pause=self.build_pause(),
             injector=injector, retry=self.build_retry(),
             max_active_per_route=self.max_active_per_route, table=table)
-        world = ScenarioWorld(self, cfg, graph, catalog, clock, pause,
-                              transport, table, sched, notifier,
-                              scale=scale, seed=seed, n_datasets=n_datasets)
-        if self.top_ups:
-            feed = PublishFeed()
-            times: List[float] = []
-            for i, tu in enumerate(self.top_ups):
-                t = tu.publish_day * DAY
-                times.append(t)
-                for j in range(tu.n_datasets):
-                    feed.publish(t, Dataset(
-                        path=f"/css03_data/CMIP6/TOPUP/batch-{i}/ds-{j:04d}",
-                        bytes=int(tu.bytes_each * scale) or tu.bytes_each,
-                        files=tu.files_each,
-                        directories=max(1, tu.files_each // 10)))
-            world.incremental = IncrementalReplicator(feed, sched,
-                                                      check_interval=DAY)
-            world.top_up_times = tuple(times)
-        return world
+        runtime = CampaignRuntime(self, cfg, catalog, table, sched, notifier,
+                                  label=self.name)
+        self._attach_top_ups(runtime, scale)
+        shared = SharedWorld(graph, clock, pause, transport)
+        return ScenarioWorld(self, cfg, graph, catalog, clock, pause,
+                             transport, table, sched, notifier,
+                             incremental=runtime.incremental,
+                             top_up_times=runtime.top_up_times,
+                             scale=scale, seed=seed, n_datasets=n_datasets,
+                             shared=shared, runtime=runtime)
 
     # --------------------------------------------------------------- helpers
     def vary(self, **changes) -> "ScenarioSpec":
@@ -218,3 +277,222 @@ class ScenarioSpec:
     def with_faults(self, **changes) -> "ScenarioSpec":
         return dataclasses.replace(
             self, faults=dataclasses.replace(self.faults, **changes))
+
+
+# ================================================================ federation
+@dataclass(frozen=True)
+class FederationMemberSpec:
+    """One campaign of a federation: a full ``ScenarioSpec`` plus the day it
+    starts (staggered starts model overlapping real-world campaigns)."""
+    scenario: ScenarioSpec
+    start_day: float = 0.0
+    label: Optional[str] = None
+
+
+@dataclass
+class FederationWorld:
+    """N compiled campaign runtimes attached to one shared substrate.  Built
+    by ``FederationSpec.build``; driven by ``repro.scenarios.events.run_world``
+    (which folds every runtime's next-event candidates into one clock
+    advance); checkpointed as a ``repro.core.snapshot.FederationSnapshot``."""
+    spec: "FederationSpec"
+    shared: SharedWorld
+    runtimes: List[CampaignRuntime]
+    scale: float = 1.0
+    seed: int = 0
+    n_datasets: Optional[int] = None
+
+    # convenience passthroughs (CLI / dashboard / tests)
+    @property
+    def clock(self):
+        return self.shared.clock
+
+    @property
+    def transport(self):
+        return self.shared.transport
+
+    @property
+    def graph(self):
+        return self.shared.graph
+
+    @property
+    def pause(self):
+        return self.shared.pause
+
+    def runtime_by_label(self, label: str) -> CampaignRuntime:
+        for rt in self.runtimes:
+            if rt.label == label:
+                return rt
+        raise KeyError(label)
+
+    def merged_catalog(self) -> Dict[str, Dataset]:
+        """Union of member catalogs (shared-path collisions were validated
+        identical at build time) — the transport's dataset re-binding map on
+        resume."""
+        merged: Dict[str, Dataset] = {}
+        for rt in self.runtimes:
+            merged.update(rt.catalog)
+        return merged
+
+
+@dataclass(frozen=True)
+class FederationSpec:
+    """N declarative campaigns sharing one simulated world.
+
+    Compiles to a ``FederationWorld``: one clock / route graph / maintenance
+    calendar / ``SimulatedTransport`` (one fault-RNG stream), with a private
+    ``CampaignRuntime`` (table + scheduler + notifier + feed) per member.
+    Concurrent members contend naturally through the transport's fair-share
+    allocator — a member route's achievable rate shrinks whenever another
+    member's movers touch the same site, which is exactly the paper's regime
+    of two overlapping campaigns reading one ~1.5 GB/s source file system.
+
+    ``shared_sites`` declares which sites are intentionally shared: every
+    site named by more than one member must be listed here, and all members
+    must describe it (and any shared route) with identical capabilities.
+    A 1-element federation is the degenerate case and runs bit-identically
+    to the member scenario built standalone.
+    """
+    name: str
+    description: str
+    members: Tuple[FederationMemberSpec, ...]
+    shared_sites: Tuple[str, ...] = ()
+
+    # --------------------------------------------------------------- helpers
+    def member_labels(self) -> List[str]:
+        labels = []
+        for i, m in enumerate(self.members):
+            label = m.label or m.scenario.name
+            if label in labels:
+                label = f"{label}#{i}"
+            labels.append(label)
+        return labels
+
+    def _validate(self) -> None:
+        if not self.members:
+            raise ValueError(f"federation {self.name!r} has no members")
+        site_owner: Dict[str, Tuple[SiteSpec, str]] = {}
+        route_owner: Dict[Tuple[str, str], Tuple[RouteSpec, str]] = {}
+        faults = self.members[0].scenario.faults
+        for m in self.members:
+            spec = m.scenario
+            if spec.faults != faults:
+                raise ValueError(
+                    f"federation {self.name!r}: member {spec.name!r} declares "
+                    "a different fault/retry profile; the shared transport "
+                    "has one fault injector and one in-transfer retry cost")
+            for s in spec.sites:
+                seen = site_owner.get(s.name)
+                if seen is None:
+                    site_owner[s.name] = (s, spec.name)
+                    continue
+                if seen[0] != s:
+                    raise ValueError(
+                        f"federation {self.name!r}: site {s.name!r} declared "
+                        f"with different capabilities by {seen[1]!r} and "
+                        f"{spec.name!r}")
+                if s.name not in self.shared_sites:
+                    raise ValueError(
+                        f"federation {self.name!r}: site {s.name!r} is used "
+                        f"by {seen[1]!r} and {spec.name!r} but not declared "
+                        "in shared_sites")
+            for r in spec.routes:
+                key = (r.source, r.destination)
+                seen = route_owner.get(key)
+                if seen is None:
+                    route_owner[key] = (r, spec.name)
+                elif seen[0] != r:
+                    raise ValueError(
+                        f"federation {self.name!r}: route {key} declared "
+                        f"with different bandwidth by {seen[1]!r} and "
+                        f"{spec.name!r}")
+
+    def build_graph(self) -> RouteGraph:
+        """Union of the member topologies (validated consistent)."""
+        sites: Dict[str, Site] = {}
+        routes: Dict[Tuple[str, str], Route] = {}
+        for m in self.members:
+            g = m.scenario.build_graph()
+            sites.update(g.sites)
+            routes.update(g.routes)
+        return RouteGraph(list(sites.values()), list(routes.values()))
+
+    def build_pause(self) -> PauseManager:
+        """Union maintenance calendar: identical outage declarations from
+        several members collapse to one window (site maintenance is a fact
+        about the site, not about who is transferring)."""
+        pause = PauseManager()
+        seen = set()
+        for m in self.members:
+            for o in m.scenario.outages:
+                key = (o.site, o.start_day, o.duration_h, o.weekly,
+                       o.until_day, o.planned, m.scenario.max_days)
+                if key in seen:
+                    continue
+                seen.add(key)
+                start = o.start_day * DAY
+                if o.weekly:
+                    until = (o.until_day if o.until_day is not None
+                             else m.scenario.max_days) * DAY
+                    pause.add_weekly(o.site, start, o.duration_h * HOUR,
+                                     until, planned=o.planned)
+                else:
+                    pause.add_window(o.site, start,
+                                     start + o.duration_h * HOUR,
+                                     planned=o.planned)
+        return pause
+
+    # ----------------------------------------------------------------- build
+    def build(self, scale: float = 1.0, seed: int = 0,
+              n_datasets: Optional[int] = None,
+              tables: Optional[List] = None) -> FederationWorld:
+        """Compile every member onto one shared substrate.  ``tables``
+        accepts restored per-member ``TransferTable``s (checkpoint resume),
+        in member order."""
+        self._validate()
+        if tables is not None and len(tables) != len(self.members):
+            raise ValueError(
+                f"federation {self.name!r}: {len(tables)} restored tables "
+                f"for {len(self.members)} members")
+        graph = self.build_graph()
+        pause = self.build_pause()
+        base = self.members[0].scenario
+        injector = FaultInjector(
+            seed=seed,
+            transient_per_tb=base.faults.transient_per_tb,
+            fragility_tail=base.faults.fragility_tail)
+        fed_notifier = FederationNotifier()
+        transport = SimulatedTransport(graph, SimClock(0.0), pause, injector,
+                                       fed_notifier, base.build_retry())
+        shared = SharedWorld(graph, transport.clock, pause, transport)
+        runtimes: List[CampaignRuntime] = []
+        merged: Dict[str, Dataset] = {}
+        labels = self.member_labels()
+        for i, m in enumerate(self.members):
+            spec = m.scenario
+            cfg = spec.to_campaign_config(scale=scale, seed=seed,
+                                          n_datasets=n_datasets)
+            notifier = Notifier()
+            (_, catalog, _, _, _, table, sched, _) = build_campaign(
+                cfg, graph=graph, retry=spec.build_retry(),
+                max_active_per_route=spec.max_active_per_route,
+                table=tables[i] if tables is not None else None,
+                transport=transport, notifier=notifier)
+            fed_notifier.attach(catalog, notifier)
+            for path, ds in catalog.items():
+                other = merged.get(path)
+                if other is None:
+                    merged[path] = ds
+                elif (other.bytes, other.files, other.directories,
+                      other.unreadable) != (ds.bytes, ds.files,
+                                            ds.directories, ds.unreadable):
+                    raise ValueError(
+                        f"federation {self.name!r}: dataset {path!r} differs "
+                        "between members — shared paths must describe the "
+                        "same data")
+            rt = CampaignRuntime(spec, cfg, catalog, table, sched, notifier,
+                                 label=labels[i], start_day=m.start_day)
+            spec._attach_top_ups(rt, scale)
+            runtimes.append(rt)
+        return FederationWorld(self, shared, runtimes, scale=scale,
+                               seed=seed, n_datasets=n_datasets)

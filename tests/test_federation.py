@@ -1,0 +1,448 @@
+"""Federation engine acceptance tests.
+
+The contract (ISSUE 4): N campaigns share one simulated world — one clock,
+one route graph, one transport whose fair-share allocator is where they
+contend — while keeping private tables/schedulers/notifiers.  Pinned here:
+
+  * a 1-element federation replays the member scenario BIT-identically
+    (iterations, float-exact sim days, fault totals, succeeded-set digest),
+    both engines — the regression anchor for the driver refactor;
+  * ``federation-paper-twice`` completes, saturates but never exceeds the
+    shared LLNL read cap, and beats the serial back-to-back variant;
+  * kill-and-resume of a federation at ~50% reproduces identical per-member
+    digests (snapshot layout, GC, and the crash-resume family entry);
+  * ``SimulatedTransport.cancel`` / ``ReplicationScheduler.teardown``
+    release a finished (or timed-out) campaign's fair-share slots;
+  * the CLI and dashboard handle federation names transparently.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.dashboard import (progress_rows, render_federation_text,
+                                  render_progress)
+from repro.core.pause import DAY
+from repro.core.snapshot import (CampaignKilled, Checkpointer,
+                                 FederationSnapshot, SnapshotError,
+                                 SnapshotVersionError,
+                                 federation_trajectory_summary, load_snapshot,
+                                 resume_world, trajectory_summary)
+from repro.core.transfer_table import Status
+from repro.scenarios.crash_resume import run_crash_resume
+from repro.scenarios.events import EngineStats, run_world
+from repro.scenarios.registry import (FEDERATION_PAPER_TWICE, get_scenario,
+                                      list_federations)
+from repro.scenarios.spec import (FederationMemberSpec, FederationSpec,
+                                  FederationWorld)
+
+TINY = dict(scale=0.004, seed=2, n_datasets=8)
+SMALL = dict(scale=0.01, seed=0, n_datasets=12)
+
+
+def _solo_federation(name="paper-2022"):
+    spec = get_scenario(name)
+    return FederationSpec(
+        name=f"solo-{name}", description="1-element federation",
+        members=(FederationMemberSpec(spec, start_day=0.0, label="solo"),))
+
+
+# ------------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("engine", ("events", "step"))
+def test_one_element_federation_bit_identical(engine):
+    """Acceptance: a single-campaign scenario run as a 1-element federation
+    reproduces the standalone trajectory exactly — same driver iterations,
+    float-equal sim days, same fault totals and succeeded-set digest."""
+    kw = dict(SMALL) if engine == "events" else dict(
+        scale=0.005, seed=0, n_datasets=10)
+    spec = get_scenario("paper-2022")
+    world = spec.build(**kw)
+    stats = EngineStats()
+    rep = run_world(world, engine=engine, stats=stats)
+    ref = trajectory_summary(rep, stats, world.table)
+
+    fed = _solo_federation().build(**kw)
+    fstats = EngineStats()
+    frep = run_world(fed, engine=engine, stats=fstats)
+    fsum = federation_trajectory_summary(frep, fstats, fed)
+    member = fsum["members"]["solo"]
+    assert fstats.iterations == stats.iterations
+    assert member["sim_days"] == ref["sim_days"]          # float-exact
+    assert member["faults_total"] == ref["faults_total"]
+    assert member["quarantined"] == ref["quarantined"]
+    assert member["bytes_at"] == ref["bytes_at"]
+    assert member["succeeded_digest"] == ref["succeeded_digest"]
+
+
+def test_one_element_federation_with_top_ups_bit_identical():
+    """The per-runtime feed cursors and pending-top-up sets survive the
+    extraction into CampaignRuntime."""
+    kw = dict(scale=0.004, seed=0, n_datasets=8)
+    spec = get_scenario("incremental-top-up")
+    world = spec.build(**kw)
+    stats = EngineStats()
+    rep = run_world(world, stats=stats)
+    ref = trajectory_summary(rep, stats, world.table)
+
+    fed = _solo_federation("incremental-top-up").build(**kw)
+    fstats = EngineStats()
+    frep = run_world(fed, stats=fstats)
+    member = federation_trajectory_summary(frep, fstats,
+                                           fed)["members"]["solo"]
+    assert fstats.iterations == stats.iterations
+    assert member["sim_days"] == ref["sim_days"]
+    assert member["succeeded_digest"] == ref["succeeded_digest"]
+
+
+# -------------------------------------------------------------- paper twice
+def _watch_llnl_egress(world):
+    """Wrap the shared allocator: record aggregate LLNL egress (rate x
+    actives) at every tick, relative to the LLNL read cap."""
+    transport = world.shared.transport
+    read_bw = world.shared.graph.sites["LLNL"].read_bw
+    seen = {"max_frac": 0.0, "max_llnl_movers": 0}
+    orig = transport._route_rates
+
+    def route_rates(movers):
+        rates = orig(movers)
+        active = {}
+        for x in movers:
+            r = (x.source, x.destination)
+            active[r] = active.get(r, 0) + 1
+        llnl = {r: n for r, n in active.items() if r[0] == "LLNL"}
+        egress = sum(rates[r] * n for r, n in llnl.items())
+        seen["max_frac"] = max(seen["max_frac"], egress / read_bw)
+        seen["max_llnl_movers"] = max(seen["max_llnl_movers"],
+                                      sum(llnl.values()))
+        return rates
+
+    transport._route_rates = route_rates
+    return seen
+
+
+def test_paper_twice_completes_with_source_cap_contention():
+    """Acceptance: both overlapped campaigns complete; aggregate LLNL egress
+    never exceeds read_bw; and the two campaigns genuinely overlap (more
+    LLNL movers at once than one campaign alone can start)."""
+    fed = get_scenario("federation-paper-twice")
+    # scale chosen so the ALCF pull outlives OLCF's day-5 DTN start: both
+    # campaigns then drive the source at once
+    world = fed.build(scale=0.2, seed=0, n_datasets=12)
+    seen = _watch_llnl_egress(world)
+    rep = run_world(world, engine="events")
+    for label, m in rep.members.items():
+        assert (all(v >= m.total_bytes * 0.999 for v in m.bytes_at.values())
+                or m.quarantined), label
+    assert seen["max_frac"] <= 1.0 + 1e-9          # conservation
+    assert seen["max_frac"] > 0.9                  # ...and truly contended
+    # both campaigns on the source at once: 2 per route x 2 routes
+    assert seen["max_llnl_movers"] > fed.members[0].scenario.max_active_per_route
+    assert rep.span_days == max(rep.finished_day.values())
+
+
+def test_overlap_beats_serial():
+    """Acceptance: total campaign days — overlapped federation < serial
+    back-to-back variant (same two member campaigns)."""
+    kw = dict(scale=0.2, seed=0, n_datasets=12)
+    over = run_world(get_scenario("federation-paper-twice").build(**kw))
+    serial = run_world(get_scenario("federation-paper-serial").build(**kw))
+    assert over.span_days < serial.span_days
+    # the serial variant's second member really did start late
+    assert serial.started_day["olcf"] == 100.0
+    assert serial.finished_day["olcf"] > 100.0
+
+
+def test_mixed_federation_runs():
+    """paper-2022 + incremental-top-up share every site and route (declared
+    in shared_sites) and still both complete."""
+    rep = run_world(get_scenario("federation-paper-and-topup").build(**TINY))
+    assert set(rep.members) == {"paper", "topup"}
+    for label, m in rep.members.items():
+        assert (all(v >= m.total_bytes * 0.999 for v in m.bytes_at.values())
+                or m.quarantined), label
+
+
+def test_staggered_member_starts_late():
+    kw = dict(scale=0.01, seed=0, n_datasets=8)
+    world = get_scenario("federation-paper-serial").build(**kw)
+    olcf = world.runtime_by_label("olcf")
+    rep = run_world(world, engine="events")
+    # no OLCF row was even requested before the stagger
+    first_request = min(r.requested for r in olcf.table.all()
+                        if r.requested is not None)
+    assert first_request >= 100.0 * DAY
+    assert rep.finished_day["alcf"] < 100.0        # done before olcf starts
+
+
+# ----------------------------------------------------- federation validation
+def test_federation_validation_rejects_conflicts():
+    paper = get_scenario("paper-2022")
+    degraded = get_scenario("degraded-source")     # different LLNL caps
+    bad = FederationSpec(
+        name="bad", description="conflicting shared site",
+        members=(FederationMemberSpec(paper, label="a"),
+                 FederationMemberSpec(degraded, label="b")),
+        shared_sites=("LLNL", "ALCF", "OLCF"))
+    with pytest.raises(ValueError, match="different capabilities"):
+        bad.build(**TINY)
+    undeclared = FederationSpec(
+        name="undeclared", description="shared site not declared",
+        members=(FederationMemberSpec(paper, label="a"),
+                 FederationMemberSpec(paper, label="b")))
+    with pytest.raises(ValueError, match="shared_sites"):
+        undeclared.build(**TINY)
+    storm = get_scenario("fault-storm")            # different fault profile
+    mixed_faults = FederationSpec(
+        name="mixed-faults", description="one injector, two profiles",
+        members=(FederationMemberSpec(paper, label="a"),
+                 FederationMemberSpec(storm, label="b")),
+        shared_sites=("LLNL", "ALCF", "OLCF"))
+    with pytest.raises(ValueError, match="fault"):
+        mixed_faults.build(**TINY)
+    with pytest.raises(ValueError, match="no members"):
+        FederationSpec(name="empty", description="",
+                       members=()).build(**TINY)
+
+
+# ----------------------------------------------------------- cancel/teardown
+def test_transport_cancel_releases_slot_and_stays_pollable():
+    from repro.core.routes import Dataset
+    world = get_scenario("paper-2022").build(**TINY)
+    tr = world.transport
+    ds = Dataset("/x/cancel-me", bytes=10 * 1024 ** 3, files=100,
+                 directories=10)
+    uid = tr.submit(ds, "LLNL", "ALCF")
+    assert tr.live_count == 1
+    tr.cancel(uid)
+    assert tr.live_count == 0
+    st = tr.poll(uid)
+    assert st.status == Status.FAILED and st.detail == "cancelled"
+    assert tr.next_event_hint() == float("inf")
+    tr.cancel(uid)                                 # terminal: no-op
+    assert tr.poll(uid).detail == "cancelled"
+    tr.cancel("no-such-uid")                       # unknown: no-op
+
+
+def test_scheduler_teardown_cancels_outstanding():
+    world = get_scenario("paper-2022").build(**SMALL)
+    clock, sched, tr = world.clock, world.sched, world.transport
+    for _ in range(12):
+        sched.step(clock.now)
+        clock.advance(1800.0)
+        tr.tick()
+    assert tr.live_count > 0
+    occupying = world.table.count_status(Status.ACTIVE, Status.QUEUED,
+                                         Status.PAUSED)
+    n = sched.teardown()
+    assert n == occupying
+    assert tr.live_count == 0                      # slots released
+    # table rows untouched: the report shows how far the campaign got
+    assert world.table.count_status(Status.ACTIVE, Status.QUEUED,
+                                    Status.PAUSED) == occupying
+
+
+def test_timed_out_member_releases_capacity_to_survivor():
+    """A member hitting its own max_days mid-federation is torn down: its
+    movers leave the shared pool and the survivor finishes."""
+    alcf = dataclasses.replace(get_scenario("paper-to-alcf"), max_days=3.0)
+    fed = FederationSpec(
+        name="timeout-fed", description="",
+        members=(FederationMemberSpec(alcf, label="doomed"),
+                 FederationMemberSpec(get_scenario("paper-to-olcf"),
+                                      label="survivor")),
+        shared_sites=("LLNL",))
+    world = fed.build(scale=0.05, seed=0, n_datasets=10)
+    state = {"alcf_movers_after_deadline": 0}
+
+    def observer(w, now):
+        if now > 3.0 * DAY + 1.0:
+            state["alcf_movers_after_deadline"] = max(
+                state["alcf_movers_after_deadline"],
+                sum(1 for x in w.shared.transport._live.values()
+                    if x.destination == "ALCF"))
+
+    rep = run_world(world, engine="events", on_iteration=observer)
+    doomed, survivor = rep.members["doomed"], rep.members["survivor"]
+    assert state["alcf_movers_after_deadline"] == 0
+    assert rep.finished_day["doomed"] == pytest.approx(3.0, abs=0.5)
+    assert not all(v >= doomed.total_bytes * 0.999
+                   for v in doomed.bytes_at.values())
+    assert all(v >= survivor.total_bytes * 0.999
+               for v in survivor.bytes_at.values())
+
+
+# -------------------------------------------------------- checkpoint/resume
+def _fed_reference(**kw):
+    world = get_scenario("federation-paper-twice").build(**kw)
+    stats = EngineStats()
+    rep = run_world(world, stats=stats)
+    return federation_trajectory_summary(rep, stats, world), stats.iterations
+
+
+@pytest.mark.parametrize("engine", ("events", "step"))
+def test_federation_kill_resume_bit_identical(tmp_path, engine):
+    """Acceptance: kill the overlapped federation at ~50%, resume from the
+    multi-runtime snapshot, and every member's final digest matches the
+    uninterrupted run's."""
+    kw = dict(SMALL) if engine == "events" else dict(
+        scale=0.005, seed=0, n_datasets=8)
+    world = get_scenario("federation-paper-twice").build(**kw)
+    stats = EngineStats()
+    rep = run_world(world, engine=engine, stats=stats)
+    ref = federation_trajectory_summary(rep, stats, world)
+    total = stats.iterations
+
+    world2 = get_scenario("federation-paper-twice").build(**kw)
+    ck = Checkpointer(str(tmp_path), kill_after=total // 2)
+    with pytest.raises(CampaignKilled):
+        run_world(world2, engine=engine, stats=EngineStats(),
+                  checkpointer=ck)
+    # one table copy per member landed next to the snapshot
+    tables = [f for f in os.listdir(tmp_path) if f.startswith("table-")]
+    assert len(tables) == 2
+
+    world3, snap, loop = resume_world(str(tmp_path))
+    assert isinstance(snap, FederationSnapshot)
+    assert snap.iterations == total // 2
+    assert snap.engine == engine
+    assert isinstance(world3, FederationWorld)
+    stats3 = EngineStats()
+    rep3 = run_world(world3, engine=engine, stats=stats3, resume=loop)
+    assert federation_trajectory_summary(rep3, stats3, world3) == ref
+
+
+def test_federation_resume_is_repeatable_and_gc_prunes_members(tmp_path):
+    ref, total = _fed_reference(**SMALL)
+    world = get_scenario("federation-paper-twice").build(**SMALL)
+    ck = Checkpointer(str(tmp_path), every=10, keep=2, kill_after=total // 3)
+    with pytest.raises(CampaignKilled):
+        run_world(world, stats=EngineStats(), checkpointer=ck)
+    snaps = [f for f in os.listdir(tmp_path) if f.startswith("snapshot-")]
+    tables = [f for f in os.listdir(tmp_path) if f.startswith("table-")]
+    assert 1 <= len(snaps) <= 2
+    assert len(tables) == 2 * len(snaps)           # GC removed older epochs
+    results = []
+    for _ in range(2):
+        w, snap, loop = resume_world(str(tmp_path))
+        st = EngineStats()
+        rep = run_world(w, engine=snap.engine, stats=st, resume=loop)
+        results.append(federation_trajectory_summary(rep, st, w))
+    assert results[0] == results[1] == ref
+
+
+def test_federation_snapshot_roundtrip_and_version_guard(tmp_path):
+    world = get_scenario("federation-paper-twice").build(**SMALL)
+    ck = Checkpointer(str(tmp_path), kill_after=10)
+    with pytest.raises(CampaignKilled):
+        run_world(world, stats=EngineStats(), checkpointer=ck)
+    snap = load_snapshot(str(tmp_path))
+    assert isinstance(snap, FederationSnapshot)
+    assert snap.transport["live"], "no live transfers captured"
+    assert len(snap.runtimes) == 2
+    assert [r["label"] for r in snap.runtimes] == ["alcf", "olcf"]
+    back = FederationSnapshot.loads(snap.dumps())
+    for f in dataclasses.fields(FederationSnapshot):
+        assert getattr(back, f.name) == getattr(snap, f.name), f.name
+    assert FederationSnapshot.loads(back.dumps()) == back  # fixed point
+    d = snap.to_dict()
+    d["version"] = 999
+    with pytest.raises(SnapshotVersionError, match="999"):
+        FederationSnapshot.from_dict(d)
+    d2 = snap.to_dict()
+    d2["kind"] = "campaign"
+    with pytest.raises(SnapshotError, match="kind"):
+        FederationSnapshot.from_dict(d2)
+    d3 = snap.to_dict()
+    d3["runtimes"][0].pop("scheduler")
+    with pytest.raises(SnapshotError, match="scheduler"):
+        FederationSnapshot.from_dict(d3)
+
+
+def test_crash_resume_federation_scenario(tmp_path):
+    spec = get_scenario("crash-resume-federation")
+    res = run_crash_resume(spec, str(tmp_path), seed=0, scale=0.01,
+                           n_datasets=10)
+    assert res["kills"]
+    assert res["match"], (res["reference"], res["resumed"])
+
+
+# ----------------------------------------------------------------- registry
+def test_federation_family_registered():
+    names = list_federations()
+    for required in ("federation-paper-twice", "federation-paper-serial",
+                     "federation-paper-and-topup"):
+        assert required in names
+        assert isinstance(get_scenario(required), FederationSpec)
+    assert FEDERATION_PAPER_TWICE.member_labels() == ["alcf", "olcf"]
+
+
+# ---------------------------------------------------------------- dashboard
+def test_dashboard_progress_rows_side_by_side():
+    # heavy enough that transfers are still moving after a few hours
+    world = get_scenario("federation-paper-twice").build(scale=0.5, seed=0,
+                                                         n_datasets=12)
+    clock, tr = world.shared.clock, world.shared.transport
+    for _ in range(10):
+        for rt in world.runtimes:
+            rt.sched.step(clock.now)
+        clock.advance(1800.0)
+        tr.tick()
+    rows = progress_rows(
+        [(rt.label, rt.table, list(rt.cfg.replicas),
+          sum(d.bytes for d in rt.catalog.values()))
+         for rt in world.runtimes])
+    assert [(r["campaign"], r["destination"]) for r in rows] == \
+        [("alcf", "ALCF"), ("olcf", "OLCF")]
+    for r in rows:
+        assert {"bytes", "files", "faults", "eta_days", "rate", "active",
+                "complete_fraction"} <= set(r)
+        assert 0.0 <= r["complete_fraction"] <= 1.0
+    # a campaign actively moving bytes has a finite, positive ETA
+    moving = [r for r in rows if r["rate"] > 0]
+    assert moving
+    assert all(0 < r["eta_days"] < float("inf") for r in moving)
+    txt = render_federation_text(world, clock.now)
+    assert "alcf" in txt and "olcf" in txt and "ETA" in txt
+    # single-campaign render keeps working and carries the progress header
+    from repro.core.dashboard import render_text
+    rt = world.runtimes[0]
+    txt2 = render_text(rt.table, list(rt.cfg.replicas),
+                       sum(d.bytes for d in rt.catalog.values()),
+                       clock.now, campaign=rt.label)
+    assert "Replication progress" in txt2 and "Replication to ALCF" in txt2
+
+
+# ----------------------------------------------------------------------- CLI
+def test_cli_federation_transparent(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    base = [sys.executable, "-m", "repro.scenarios.run", "--scenario",
+            "federation-paper-twice", "--datasets", "8", "--scale", "0.004"]
+    ref_json = str(tmp_path / "ref.json")
+    r = subprocess.run(base + ["--json", ref_json], capture_output=True,
+                       text=True, timeout=300, env=env, cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    ref = json.load(open(ref_json))
+    assert ref["scenario"] == "federation-paper-twice"
+    assert set(ref["members"]) == {"alcf", "olcf"}
+    assert set(ref["trajectory"]["members"]) == {"alcf", "olcf"}
+
+    ck = str(tmp_path / "ck")
+    kill_at = max(1, ref["engine_iterations"] // 2)
+    r = subprocess.run(base + ["--checkpoint-dir", ck, "--kill-after",
+                               str(kill_at)],
+                       capture_output=True, text=True, timeout=300, env=env,
+                       cwd=".")
+    assert r.returncode == 3, (r.returncode, r.stderr[-2000:])
+    res_json = str(tmp_path / "resumed.json")
+    r = subprocess.run([sys.executable, "-m", "repro.scenarios.run",
+                        "--resume", ck, "--json", res_json],
+                       capture_output=True, text=True, timeout=300, env=env,
+                       cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    resumed = json.load(open(res_json))
+    assert resumed["trajectory"] == ref["trajectory"]
+    assert resumed["resumed_from"]["iterations"] == kill_at

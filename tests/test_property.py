@@ -59,6 +59,54 @@ def test_int8_quantization_error_bound(vals):
     assert err <= float(s) * 0.5 + 1e-6
 
 
+# ------------------------------------------------- bandwidth conservation
+@st.composite
+def _mover_populations(draw):
+    """An arbitrary topology plus an arbitrary live-mover population: sites
+    with random read/write caps, a random subset of directed routes, and
+    0..6 concurrent transfers per route — one campaign's movers or the
+    union of many federated campaigns' movers (the allocator cannot tell
+    the difference: it sees one shared population)."""
+    n_sites = draw(st.integers(2, 5))
+    sites = [f"S{i}" for i in range(n_sites)]
+    caps = {s: (draw(st.floats(0.05, 10.0)) * GB,
+                draw(st.floats(0.05, 10.0)) * GB) for s in sites}
+    pairs = [(a, b) for a in sites for b in sites if a != b]
+    chosen = draw(st.lists(st.sampled_from(pairs), min_size=1, max_size=8,
+                           unique=True))
+    routes = {p: draw(st.floats(0.01, 8.0)) * GB for p in chosen}
+    actives = {p: draw(st.integers(0, 6)) for p in chosen}
+    return caps, routes, actives
+
+
+@given(_mover_populations())
+@settings(max_examples=80, deadline=None)
+def test_fair_share_never_exceeds_site_or_route_caps(pop):
+    """The fair-share allocator conserves capacity for ANY mover population:
+    per route, rate x actives <= route bandwidth; per site, aggregate egress
+    <= read_bw and aggregate ingress <= write_bw.  This is the invariant
+    that makes federated campaigns contend correctly — N campaigns' movers
+    are just a bigger population on the same shared caps."""
+    from repro.core.routes import Route, RouteGraph, Site
+    caps, routes, actives = pop
+    graph = RouteGraph(
+        [Site(s, read_bw=r, write_bw=w) for s, (r, w) in caps.items()],
+        [Route(a, b, bw) for (a, b), bw in routes.items()])
+    population = {r: n for r, n in actives.items() if n > 0}
+    rates = {r: graph.effective_rate(r[0], r[1], population)
+             for r in population}
+    eps = 1e-6
+    for r, n in population.items():
+        assert rates[r] * n <= routes[r] * (1 + eps)
+    for s, (read_bw, write_bw) in caps.items():
+        egress = sum(rates[r] * n for r, n in population.items()
+                     if r[0] == s)
+        ingress = sum(rates[r] * n for r, n in population.items()
+                      if r[1] == s)
+        assert egress <= read_bw * (1 + eps)
+        assert ingress <= write_bw * (1 + eps)
+
+
 # --------------------------------------------------- scheduler invariants
 @given(seed=st.integers(0, 10_000),
        n=st.integers(4, 14),
