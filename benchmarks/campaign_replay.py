@@ -269,6 +269,71 @@ def federation_bench(n_datasets: int = 32, seed: int = 0,
     }
 
 
+# policy-bench shapes: small enough for CI, large enough that the task-
+# dispatch overhead the control plane amortizes actually dominates static
+POLICY_SHAPES = {
+    "small-file-storm": dict(n_datasets=200, scale=0.2),
+    "mixed-bundle-paper": dict(n_datasets=24, scale=0.01),
+    # enough bytes (0.73 PB) that the kneed source bandwidth — not the
+    # maintenance calendar — bounds the campaign
+    "lossy-route-tuning": dict(n_datasets=32, scale=0.1),
+}
+
+
+def policy_bench(seed: int = 0) -> dict:
+    """The control-plane acceptance experiment: replay each policy scenario
+    under its declared adaptive policy AND under the naive static
+    per-dataset baseline, and record the determinism tuple (iterations,
+    float-exact sim days, faults, succeeded digest) plus wall clock for
+    each.  ``small-file-storm`` additionally runs both driver engines per
+    policy, and carries the headline verdict: adaptive bundling must finish
+    in no more simulated campaign days than the static baseline — the
+    simulator's quantitative version of 'Globus-style bundling beats
+    scripted per-dataset submission on small-file-heavy catalogs'."""
+    from repro.control.policy import STATIC_POLICY
+    from repro.core.snapshot import trajectory_summary
+    from repro.scenarios.events import EngineStats, run_world
+    from repro.scenarios.registry import get_scenario
+
+    out = {"seed": seed,
+           "shapes": {k: dict(v) for k, v in POLICY_SHAPES.items()},
+           "scenarios": {}}
+    for name, shape in POLICY_SHAPES.items():
+        block = {}
+        engines = (("events", "step") if name == "small-file-storm"
+                   else ("events",))
+        for label in ("static", "adaptive"):
+            spec = get_scenario(name)
+            if label == "static":
+                spec = spec.with_policy(STATIC_POLICY)
+            for engine in engines:
+                world = spec.build(seed=seed, **shape)
+                stats = EngineStats()
+                t0 = time.time()
+                rep = run_world(world, engine=engine, stats=stats)
+                wall = time.time() - t0
+                traj = trajectory_summary(rep, stats, world.table)
+                key = label if engine == "events" else f"{label}_{engine}"
+                block[key] = {
+                    "wall_s": round(wall, 3),
+                    "iterations": stats.iterations,
+                    "sim_days": rep.duration_days,
+                    "faults_total": rep.faults_total,
+                    "quarantined": rep.quarantined,
+                    "succeeded_digest": traj["succeeded_digest"],
+                }
+        block["adaptive_beats_static"] = (
+            block["adaptive"]["sim_days"] <= block["static"]["sim_days"])
+        out["scenarios"][name] = block
+        print(f"{name:20} static {block['static']['sim_days']:8.3f} d "
+              f"({block['static']['wall_s']:.2f}s) vs adaptive "
+              f"{block['adaptive']['sim_days']:8.3f} d "
+              f"({block['adaptive']['wall_s']:.2f}s)"
+              + ("  ADAPTIVE WINS" if block["adaptive_beats_static"]
+                 else "  !! static wins"))
+    return out
+
+
 def scaling(ns=SCALING_NS, scenario: str = "paper-2022", seed: int = 0) -> dict:
     rows = []
     for n in ns:
@@ -297,6 +362,11 @@ def main():
                          "BENCH_scenarios.json")
     ap.add_argument("--checkpoint-every", type=int, default=25,
                     help="snapshot cadence for --checkpoint-bench")
+    ap.add_argument("--policy-bench", action="store_true",
+                    help="compare the control plane's adaptive policies "
+                         "against the static per-dataset baseline on the "
+                         "policy scenarios and record it in "
+                         "BENCH_scenarios.json")
     ap.add_argument("--federation-bench", action="store_true",
                     help="benchmark the overlapped two-campaign federation "
                          "vs its serial variant (both engines, source-cap "
@@ -317,6 +387,11 @@ def main():
         key = ("scaling" if args.scenario == "paper-2022"
                else f"scaling_{args.scenario}")
         emit_bench([], path=args.bench_out, extra={key: doc})
+        return
+    if args.policy_bench:
+        doc = policy_bench()
+        emit_bench([], path=args.bench_out, extra={"policy": doc})
+        print(json.dumps(doc, indent=2))
         return
     if args.federation_bench:
         doc = federation_bench(n_datasets=min(args.datasets, 32))

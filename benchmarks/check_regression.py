@@ -65,6 +65,55 @@ def check(baseline: dict, candidate: dict, max_regress: float) -> list:
                          f"baseline {b_ev.get(key)} vs candidate {c_ev.get(key)}")
     _wall_gate("paper-2022", base, cand, max_regress, fails)
     fails.extend(check_federation(baseline, candidate, max_regress))
+    fails.extend(check_policy(baseline, candidate))
+    return fails
+
+
+def check_policy(baseline: dict, candidate: dict) -> list:
+    """Control-plane gate: every policy-bench run (scenario × policy ×
+    engine) must reproduce the baseline's determinism tuple exactly —
+    iterations, float-exact simulated days, fault totals, and the
+    succeeded-set digest — and the adaptive policy must finish
+    ``small-file-storm`` in no more simulated campaign days than the static
+    per-dataset baseline."""
+    fails = []
+    base = baseline.get("policy")
+    if base is None:
+        return []               # pre-control-plane baseline: nothing to gate
+    cand = candidate.get("policy")
+    if cand is None:
+        return ["candidate is missing the policy block "
+                "(run benchmarks/campaign_replay.py --policy-bench)"]
+    if base.get("seed") != cand.get("seed") or \
+            base.get("shapes") != cand.get("shapes"):
+        return [f"policy benchmark shapes differ: baseline "
+                f"seed={base.get('seed')}/shapes={base.get('shapes')} vs "
+                f"candidate seed={cand.get('seed')}/"
+                f"shapes={cand.get('shapes')}"]
+    for scenario, b_block in base.get("scenarios", {}).items():
+        c_block = cand.get("scenarios", {}).get(scenario)
+        if c_block is None:
+            fails.append(f"policy scenario {scenario!r} missing from "
+                         "candidate")
+            continue
+        for run, b_run in b_block.items():
+            if not isinstance(b_run, dict):
+                continue        # the adaptive_beats_static verdict
+            c_run = c_block.get(run, {})
+            for key in ("iterations", "sim_days", "faults_total",
+                        "quarantined", "succeeded_digest"):
+                if b_run.get(key) != c_run.get(key):
+                    fails.append(
+                        f"policy determinism drift in "
+                        f"{scenario}.{run}.{key}: baseline {b_run.get(key)} "
+                        f"vs candidate {c_run.get(key)}")
+    storm = cand.get("scenarios", {}).get("small-file-storm", {})
+    if storm and not storm.get("adaptive_beats_static"):
+        fails.append(
+            "adaptive policy no longer beats the static per-dataset "
+            f"baseline on small-file-storm: adaptive "
+            f"{storm.get('adaptive', {}).get('sim_days')} d vs static "
+            f"{storm.get('static', {}).get('sim_days')} d")
     return fails
 
 

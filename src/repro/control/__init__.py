@@ -1,0 +1,22 @@
+"""Control plane: file-level bundling and adaptive transfer-tuning policies.
+
+``TransferPolicySpec`` declares the policy on a scenario; ``BundleComposer``
+bin-packs the catalog into transfer tasks; ``ConcurrencyTuner`` /
+``BundleSizeTuner`` steer live concurrency caps and future bundle sizing
+from per-route flow telemetry; ``ControlPlane`` wires it all onto one
+campaign runtime, checkpointable down to the cursor.
+"""
+from repro.control.bundles import (BUNDLE_PREFIX, BalancedPacker,
+                                   BundleCaps, BundleComposer, BundleItem,
+                                   BundlePolicy, GreedyPacker, make_packer)
+from repro.control.controllers import (BundleSizeTuner, ConcurrencyTuner,
+                                       Controller, make_controllers)
+from repro.control.plane import ControlPlane, PolicyLedger
+from repro.control.policy import STATIC_POLICY, TransferPolicySpec
+
+__all__ = [
+    "BUNDLE_PREFIX", "BalancedPacker", "BundleCaps", "BundleComposer",
+    "BundleItem", "BundlePolicy", "BundleSizeTuner", "ConcurrencyTuner",
+    "ControlPlane", "Controller", "GreedyPacker", "PolicyLedger",
+    "STATIC_POLICY", "TransferPolicySpec", "make_controllers", "make_packer",
+]

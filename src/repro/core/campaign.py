@@ -41,6 +41,7 @@ class CampaignConfig:
     unreadable_fraction: float = 0.01    # phase 4: CMIP5 permission incident
     human_fix_days: float = 3.0          # time for admins to fix permissions
     scale: float = 1.0                   # 1.0 = full 7.3 PB; tests use less
+    task_setup_s: float = 0.0            # fixed dispatch cost per transfer task
 
 
 @dataclass
@@ -72,6 +73,32 @@ class FederationReport:
     span_days: float                         # last member's finish day
 
 
+def build_catalog(cfg: CampaignConfig,
+                  graph: RouteGraph) -> Dict[str, Dataset]:
+    """The campaign's dataset catalog: synthesized ESGF-like paths,
+    oversized requests pre-split to fit the source's scan memory (paper §5),
+    and the permission incident's unreadable fraction marked.  Pure function
+    of (cfg, graph) — callers may build it ahead of ``build_campaign`` (the
+    control plane does, to bundle it) without perturbing the trajectory."""
+    raw = make_catalog(
+        n_datasets=cfg.n_datasets,
+        total_bytes=int(cfg.total_bytes * cfg.scale),
+        total_files=int(cfg.total_files * cfg.scale),
+        seed=cfg.seed)
+    catalog: Dict[str, Dataset] = {}
+    limit = graph.sites[cfg.source].scan_mem_limit_files
+    rng = np.random.default_rng(cfg.seed + 1)
+    for ds in raw:
+        for part in split_oversized(ds, limit):
+            catalog[part.path] = part
+    # permission incident: a fraction of (CMIP5-ish) datasets unreadable
+    paths = sorted(catalog)
+    n_bad = int(len(paths) * cfg.unreadable_fraction)
+    for p in rng.choice(paths, size=n_bad, replace=False):
+        catalog[p].unreadable = True
+    return catalog
+
+
 def build_campaign(cfg: CampaignConfig, *,
                    graph: Optional[RouteGraph] = None,
                    pause: Optional[PauseManager] = None,
@@ -80,7 +107,8 @@ def build_campaign(cfg: CampaignConfig, *,
                    max_active_per_route: int = 2,
                    table: Optional[TransferTable] = None,
                    transport: Optional[SimulatedTransport] = None,
-                   notifier: Optional[Notifier] = None):
+                   notifier: Optional[Notifier] = None,
+                   catalog: Optional[Dict[str, Dataset]] = None):
     """Wire up catalog, sites, calendar, transport, table, scheduler.
 
     The keyword overrides let a ``repro.scenarios.spec.ScenarioSpec`` compile
@@ -96,26 +124,15 @@ def build_campaign(cfg: CampaignConfig, *,
     authoritative; ``notifier`` is the *campaign's* notifier (the scheduler's
     quarantine notifications go there), which may differ from the transport's
     routing notifier.
+
+    ``catalog`` overrides the internally built catalog — the control plane's
+    bundling path, where the scheduler's work items are composed *bundles*
+    (possibly a live, growing dict) rather than raw catalog datasets.
     """
     if graph is None:
         graph = paper_route_graph()
-    raw = make_catalog(
-        n_datasets=cfg.n_datasets,
-        total_bytes=int(cfg.total_bytes * cfg.scale),
-        total_files=int(cfg.total_files * cfg.scale),
-        seed=cfg.seed)
-    # paper §5: pre-split oversized requests so source scans fit in memory
-    catalog: Dict[str, Dataset] = {}
-    limit = graph.sites[cfg.source].scan_mem_limit_files
-    rng = np.random.default_rng(cfg.seed + 1)
-    for ds in raw:
-        for part in split_oversized(ds, limit):
-            catalog[part.path] = part
-    # permission incident: a fraction of (CMIP5-ish) datasets unreadable
-    paths = sorted(catalog)
-    n_bad = int(len(paths) * cfg.unreadable_fraction)
-    for p in rng.choice(paths, size=n_bad, replace=False):
-        catalog[p].unreadable = True
+    if catalog is None:
+        catalog = build_catalog(cfg, graph)
 
     clock = transport.clock if transport is not None else SimClock(0.0)
     if pause is None and transport is not None:
@@ -141,7 +158,8 @@ def build_campaign(cfg: CampaignConfig, *,
         retry = RetryPolicy(max_retries=8, backoff_s=3600.0)
     if transport is None:
         transport = SimulatedTransport(graph, clock, pause, injector,
-                                       notifier, retry)
+                                       notifier, retry,
+                                       task_setup_s=cfg.task_setup_s)
     if table is None:
         table = TransferTable()
     sched = ReplicationScheduler(

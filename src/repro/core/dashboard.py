@@ -32,10 +32,10 @@ def _fmt_rate(bps: float) -> str:
     return _fmt_bytes(bps) + "/s"
 
 
-def _fmt_eta(days: float) -> str:
+def _fmt_eta(days: Optional[float]) -> str:
     if days == 0.0:
         return "done"
-    if days == float("inf"):
+    if days is None or days != days or days == float("inf"):
         return "stalled"
     return f"{days:.1f} d"
 
@@ -60,14 +60,19 @@ def progress_rows(campaigns: Sequence[CampaignEntry]) -> List[Dict]:
             got = table.bytes_at(dst)
             files = sum(r.files for r in done)
             faults = sum(r.faults for r in done + live + other)
-            rate = sum(r.rate for r in live if r.status == Status.ACTIVE)
+            # a freshly resumed campaign's first tick can report rows with
+            # zero elapsed active time: drop non-finite per-row rates so the
+            # aggregate (and the ETA below) never goes inf/nan
+            rate = sum(r.rate for r in live
+                       if r.status == Status.ACTIVE
+                       and r.rate == r.rate and r.rate != float("inf"))
             remaining = max(0, total_bytes - got)
             if remaining == 0:
                 eta_days = 0.0
             elif rate > 0:
                 eta_days = remaining / rate / 86400.0
             else:
-                eta_days = float("inf")
+                eta_days = None     # stalled: no JSON-hostile inf/nan
             rows.append({
                 "campaign": label,
                 "destination": dst,
@@ -104,11 +109,68 @@ def render_progress(campaigns: Sequence[CampaignEntry], now: float) -> str:
 
 def render_federation_text(world, now: float) -> str:
     """Progress table for a compiled ``FederationWorld``: one row per
-    (member campaign, destination)."""
+    (member campaign, destination), plus each member's control-plane state
+    when one is attached."""
     campaigns = [(rt.label, rt.table, list(rt.cfg.replicas),
                   sum(d.bytes for d in rt.catalog.values()))
                  for rt in world.runtimes]
-    return render_progress(campaigns, now)
+    lines = [render_progress(campaigns, now)]
+    for rt in world.runtimes:
+        if rt.control is not None:
+            lines.append(render_policy_text(rt.control, now))
+    return "\n".join(lines)
+
+
+# ------------------------------------------------------- control-plane view
+def policy_rows(control) -> List[Dict]:
+    """The control plane's live state as dashboard rows: current per-route
+    concurrency caps, the composer's cut progress and current targets, and
+    the most recent ledger decisions."""
+    rows: List[Dict] = [{
+        "campaign": control.label,
+        "kind": "caps",
+        "route_caps": {f"{s}->{d}": c
+                       for (s, d), c in
+                       sorted(control.sched.policy.route_caps.items())},
+        "default_cap": control.sched.policy.max_active_per_route,
+    }]
+    comp = control.composer
+    if comp is not None:
+        rows.append({
+            "campaign": control.label,
+            "kind": "composer",
+            "bundles_cut": len(comp.bundle_catalog),
+            "exhausted": comp.done,
+            "target_files": comp.target_files,
+            "target_bytes": comp.target_bytes,
+        })
+    for e in control.ledger.entries[-8:]:
+        rows.append(dict(e, campaign=control.label, kind="decision"))
+    return rows
+
+
+def render_policy_text(control, now: float) -> str:
+    """The policy view as text: caps line, composer line, recent decisions."""
+    lines = [f"--- policy [{control.label}] @ t={now/86400:.2f} d ---"]
+    for r in policy_rows(control):
+        if r["kind"] == "caps":
+            caps = ", ".join(f"{k}:{v}" for k, v in r["route_caps"].items())
+            lines.append(f"caps  default={r['default_cap']} "
+                         f"{caps or '(all default)'}")
+        elif r["kind"] == "composer":
+            lines.append(
+                f"bundles cut={r['bundles_cut']} "
+                f"target={r['target_files']} files/"
+                f"{_fmt_bytes(r['target_bytes'])} "
+                f"{'EXHAUSTED' if r['exhausted'] else 'composing'}")
+        else:
+            what = (f"{'->'.join(r['route'])} cap {r['prev_cap']}->{r['cap']}"
+                    if "route" in r else
+                    f"target {r['target_files']} files/"
+                    f"{_fmt_bytes(r['target_bytes'])}")
+            lines.append(f"t={r['t_day']:.2f}d {r['controller']:8} {what} "
+                         f"({r['gbps']:.3f} GB/s)")
+    return "\n".join(lines)
 
 
 # ----------------------------------------------------------- detailed views

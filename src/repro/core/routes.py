@@ -37,6 +37,11 @@ class Site:
     write_bw: float           # aggregate sink rate cap (bytes/s)
     scan_files_per_s: float = 50_000.0   # metadata scan throughput
     scan_mem_limit_files: int = 5_000_000  # OOM threshold for one scan (paper §5)
+    # DTN contention knee: beyond this many concurrent transfers touching the
+    # site, aggregate throughput *degrades* (stream thrashing — the classic
+    # GridFTP parallelism curve rises then falls).  None = ideal fair share,
+    # exactly the pre-knee model.
+    concurrency_knee: Optional[int] = None
 
 
 @dataclass
@@ -61,20 +66,32 @@ class RouteGraph:
             return 0.0
         return min(r.bandwidth, self.sites[src].read_bw, self.sites[dst].write_bw)
 
+    @staticmethod
+    def _contended(cap: float, load: int, knee: Optional[int]) -> float:
+        """A site's aggregate cap under ``load`` concurrent transfers: ideal
+        up to the contention knee, degrading as ``knee/load`` beyond it."""
+        if knee is None or load <= knee:
+            return cap
+        return cap * (knee / load)
+
     def effective_rate(self, src: str, dst: str,
                        active_by_route: Dict[Tuple[str, str], int]) -> float:
         """Fair-share rate for ONE transfer on (src, dst) given concurrent
         transfers: the route cap is shared among its actives, and each site's
-        read/write caps are shared among all transfers touching the site."""
+        read/write caps are shared among all transfers touching the site
+        (degraded past the site's contention knee, when one is declared)."""
         n_route = max(1, active_by_route.get((src, dst), 1))
         src_load = sum(n for (s, _), n in active_by_route.items() if s == src) or 1
         dst_load = sum(n for (_, d), n in active_by_route.items() if d == dst) or 1
         r = self.route(src, dst)
         if r is None:
             return 0.0
+        s_src, s_dst = self.sites[src], self.sites[dst]
         return min(r.bandwidth / n_route,
-                   self.sites[src].read_bw / src_load,
-                   self.sites[dst].write_bw / dst_load)
+                   self._contended(s_src.read_bw, src_load,
+                                   s_src.concurrency_knee) / src_load,
+                   self._contended(s_dst.write_bw, dst_load,
+                                   s_dst.concurrency_knee) / dst_load)
 
 
 # --------------------------------------------------------------- paper setup

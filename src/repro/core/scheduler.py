@@ -38,7 +38,7 @@ rows that can actually change state.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.faults import Notifier, RetryPolicy
@@ -53,6 +53,14 @@ class ReplicationPolicy:
     source: str                       # e.g. "LLNL"
     replicas: Sequence[str]           # priority order, e.g. ("ALCF", "OLCF")
     max_active_per_route: int = 2     # paper: two per route (scan/move overlap)
+    # live per-route overrides, written by the control plane's concurrency
+    # tuner (repro.control) and serialized in its snapshot block; routes
+    # without an entry use the static ``max_active_per_route``
+    route_caps: Dict[Tuple[str, str], int] = field(default_factory=dict)
+
+    def cap(self, source: str, destination: str) -> int:
+        return self.route_caps.get((source, destination),
+                                   self.max_active_per_route)
 
 
 OCCUPYING = (Status.ACTIVE, Status.QUEUED, Status.PAUSED)
@@ -220,7 +228,7 @@ class ReplicationScheduler:
     # ------------------------------------------------------------ route starts
     def _slots(self, src: str, dst: str) -> int:
         used = self.table.count_route(src, dst, *OCCUPYING)
-        return max(0, self.policy.max_active_per_route - used)
+        return max(0, self.policy.cap(src, dst) - used)
 
     def _readmit_quarantined(self, dst: str) -> List[str]:
         """Paper §5: quarantined transfers are re-admitted once the human has

@@ -40,8 +40,11 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.transfer_table import Status, TransferTable
 
-SNAPSHOT_VERSION = 1
-FEDERATION_SNAPSHOT_VERSION = 1
+# v2: adds the control-plane block (bundle-composer cursor + cut bundles,
+# controller internals, live per-route caps, policy ledger) and the
+# transport's per-route telemetry counters + per-task setup cursor
+SNAPSHOT_VERSION = 2
+FEDERATION_SNAPSHOT_VERSION = 2
 FEDERATION_KIND = "federation"
 SNAPSHOT_PREFIX = "snapshot-"
 TABLE_PREFIX = "table-"
@@ -115,6 +118,11 @@ class CampaignSnapshot:
     feed_cursor: int
     incremental_last_check: float
     admitted_top_ups: List[str]
+    control: Optional[dict]       # ControlPlane.state_dict(); None = static
+    # True when the run forced the static per-dataset baseline (CLI
+    # --policy static): resume must re-apply the override instead of
+    # rebuilding the registry scenario's declared (possibly adaptive) policy
+    policy_static: bool
 
     # ------------------------------------------------------------- serialize
     def to_dict(self) -> dict:
@@ -171,6 +179,7 @@ class FederationSnapshot:
     transport: dict               # SimulatedTransport.state_dict()
     finished_at: List[Optional[float]]
     runtimes: List[dict]          # per-member blocks, member order
+    policy_static: bool           # run forced the static per-dataset policy
 
     # ------------------------------------------------------------- serialize
     def to_dict(self) -> dict:
@@ -204,7 +213,8 @@ class FederationSnapshot:
         _RUNTIME_KEYS = {"label", "scenario", "start_day", "table_file",
                          "scheduler", "notifier", "fix_at", "next_snap_day",
                          "timeline", "pending_top_ups", "feed_cursor",
-                         "incremental_last_check", "admitted_top_ups"}
+                         "incremental_last_check", "admitted_top_ups",
+                         "control"}
         for r in kw["runtimes"]:
             if set(r) != _RUNTIME_KEYS:
                 raise SnapshotError(
@@ -255,6 +265,9 @@ def capture_snapshot(world, loop: LoopState, engine: str,
                                 if world.incremental is not None else 0.0),
         admitted_top_ups=sorted(d.path for _, d in feed_events
                                 if d.path in world.catalog),
+        control=(world.control.state_dict()
+                 if world.control is not None else None),
+        policy_static=not world.spec.policy.enabled,
     )
 
 
@@ -275,11 +288,21 @@ def apply_snapshot(world, snap: CampaignSnapshot) -> LoopState:
     elif snap.admitted_top_ups:
         raise SnapshotError("snapshot has top-ups but the scenario has no "
                             "incremental feed")
+    if (snap.control is None) != (world.control is None):
+        raise SnapshotError(
+            "snapshot and world disagree about the control plane — the "
+            "scenario's transfer policy changed since the snapshot was "
+            "written")
+    if world.control is not None:
+        # restore the composer cursor / cut bundles BEFORE re-binding the
+        # transport's live movers: movers may reference bundle paths
+        world.control.load_state_dict(snap.control)
     world.clock.now = snap.clock_now
     world.transport.injector.load_state_dict(snap.injector)
     world.notifier.load_state_dict(snap.notifier)
     world.sched.load_state_dict(snap.scheduler)
-    world.transport.load_state_dict(snap.transport, world.catalog)
+    world.transport.load_state_dict(snap.transport,
+                                    world.runtime.binding_catalog())
     return LoopState(
         iterations=snap.iterations,
         fix_at=dict(snap.fix_at),
@@ -311,6 +334,8 @@ def _capture_runtime(rt, ls: LoopState, table_file: str) -> dict:
                                    if rt.incremental is not None else 0.0),
         "admitted_top_ups": sorted(d.path for _, d in feed_events
                                    if d.path in rt.catalog),
+        "control": (rt.control.state_dict()
+                    if rt.control is not None else None),
     }
 
 
@@ -343,6 +368,8 @@ def capture_federation_snapshot(world, loop: "FederationLoopState",
         runtimes=[_capture_runtime(rt, ls, tf)
                   for rt, ls, tf in zip(world.runtimes, loop.members,
                                         table_files)],
+        policy_static=(world.spec.policy is not None
+                       and not world.spec.policy.enabled),
     )
 
 
@@ -361,6 +388,12 @@ def _apply_runtime(rt, block: dict) -> LoopState:
     elif block["admitted_top_ups"]:
         raise SnapshotError(f"member {rt.label!r} snapshot has top-ups but "
                             "the scenario has no incremental feed")
+    if (block["control"] is None) != (rt.control is None):
+        raise SnapshotError(
+            f"member {rt.label!r}: snapshot and world disagree about the "
+            "control plane — the member's transfer policy changed")
+    if rt.control is not None:
+        rt.control.load_state_dict(block["control"])
     rt.notifier.load_state_dict(block["notifier"])
     rt.sched.load_state_dict(block["scheduler"])
     return LoopState(
@@ -399,6 +432,18 @@ def apply_federation_snapshot(world, snap: FederationSnapshot
 
 
 # --------------------------------------------------------------------- loading
+def _reapply_static_policy(spec, snap):
+    """A run launched with the static-policy override (CLI ``--policy
+    static``) must resume under that same override — the registry scenario's
+    declared policy may be adaptive, and rebuilding with it would leave the
+    world with a control plane the snapshot never had.  Idempotent for
+    scenarios whose declared policy is already static."""
+    if not snap.policy_static or not hasattr(spec, "with_policy"):
+        return spec
+    from repro.control.policy import STATIC_POLICY
+    return spec.with_policy(STATIC_POLICY)
+
+
 def load_snapshot(ckpt_dir: str):
     """The newest complete snapshot in ``ckpt_dir`` (via ``LATEST``): a
     ``CampaignSnapshot`` or, for federated runs, a ``FederationSnapshot``
@@ -431,6 +476,7 @@ def resume_world(ckpt_dir: str, spec=None):
         if spec is None:
             from repro.scenarios.registry import get_scenario
             spec = get_scenario(snap.federation)
+        spec = _reapply_static_policy(spec, snap)
         tables = [TransferTable.load(os.path.join(ckpt_dir, r["table_file"]))
                   for r in snap.runtimes]
         world = spec.build(scale=snap.scale, seed=snap.seed,
@@ -440,6 +486,7 @@ def resume_world(ckpt_dir: str, spec=None):
     if spec is None:
         from repro.scenarios.registry import get_scenario
         spec = get_scenario(snap.scenario)
+    spec = _reapply_static_policy(spec, snap)
     table = TransferTable.load(os.path.join(ckpt_dir, snap.table_file))
     world = spec.build(scale=snap.scale, seed=snap.seed,
                        n_datasets=snap.n_datasets, table=table)

@@ -50,6 +50,14 @@ class SimClock:
 UNREADABLE_HALT_FRACTION = 0.25
 
 
+def shared_scan_rate(site, scanners: int) -> float:
+    """Per-transfer metadata-scan rate when ``scanners`` concurrent scans
+    share one source site's scan throughput — the single definition both the
+    tick advance and the next-event hint must use, so the two can never
+    drift apart."""
+    return site.scan_files_per_s / max(1, scanners)
+
+
 @dataclass
 class TransferState:
     status: Status
@@ -82,6 +90,7 @@ class _SimXfer:
     destination: str
     submitted_at: float
     phase: str = "scan"              # scan -> move -> done/failed
+    setup_left: float = 0.0          # fixed per-task dispatch cost (seconds)
     scan_files_left: float = 0.0
     bytes_done: float = 0.0
     active_s: float = 0.0                 # time actually moving bytes
@@ -98,7 +107,8 @@ class SimulatedTransport(Transport):
                  pause: PauseManager, injector: FaultInjector,
                  notifier: Notifier,
                  retry: RetryPolicy = RetryPolicy(),
-                 vectorized: bool = True):
+                 vectorized: bool = True,
+                 task_setup_s: float = 0.0):
         self.graph = graph
         self.clock = clock
         self.pause = pause
@@ -106,6 +116,10 @@ class SimulatedTransport(Transport):
         self.notifier = notifier
         self.retry = retry
         self.vectorized = vectorized
+        # fixed dispatch cost per submitted task, paid before the metadata
+        # scan (Globus task setup/queueing) — what makes one-task-per-tiny-
+        # dataset workloads slow and bundling worthwhile.  0.0 = seed model.
+        self.task_setup_s = task_setup_s
         self._live: Dict[str, _SimXfer] = {}
         # terminal transfers: uid -> final TransferState, evicted from the
         # live pool so per-tick cost never grows with campaign history
@@ -114,6 +128,10 @@ class SimulatedTransport(Transport):
         # telemetry, bounded: per-(day, route) byte totals instead of one
         # tuple per mover per tick
         self.flow_totals: Dict[Tuple[int, Tuple[str, str]], float] = {}
+        # cumulative per-route counters for the control plane's tuners:
+        # bytes moved and transient/persistent faults observed, O(routes)
+        self._route_bytes: Dict[Tuple[str, str], float] = {}
+        self._route_faults: Dict[Tuple[str, str], int] = {}
 
     @property
     def live_count(self) -> int:
@@ -124,6 +142,7 @@ class SimulatedTransport(Transport):
         uid = str(uuidlib.uuid4())
         x = _SimXfer(dataset=dataset, source=source, destination=destination,
                      submitted_at=self.clock.now,
+                     setup_left=float(self.task_setup_s),
                      scan_files_left=float(dataset.files))
         n_faults = self.injector.n_transient_faults(dataset.path, dataset.bytes)
         if n_faults:
@@ -171,6 +190,22 @@ class SimulatedTransport(Transport):
     def _log_flow(self, route: Tuple[str, str], nbytes: float) -> None:
         key = (int(self.clock.now // DAY), route)
         self.flow_totals[key] = self.flow_totals.get(key, 0.0) + nbytes
+        self._route_bytes[route] = self._route_bytes.get(route, 0.0) + nbytes
+
+    def _log_fault(self, route: Tuple[str, str], n: int = 1) -> None:
+        self._route_faults[route] = self._route_faults.get(route, 0) + n
+
+    def route_telemetry(self) -> Dict[Tuple[str, str], Tuple[float, int]]:
+        """Cumulative (bytes moved, faults observed) per route since the
+        campaign start — the control plane's tuners difference consecutive
+        readings to get per-interval throughput and fault rates.  Sorted
+        route order, so any float reduction a controller runs over the
+        values is evaluated identically in every process (kill/resume
+        crosses process boundaries; set order does not)."""
+        routes = sorted(set(self._route_bytes) | set(self._route_faults))
+        return {r: (self._route_bytes.get(r, 0.0),
+                    self._route_faults.get(r, 0))
+                for r in routes}
 
     def _pause_memo(self, now: float) -> Callable[[str], bool]:
         """Per-tick memoized site-pause lookup (two sites per transfer, but
@@ -220,19 +255,27 @@ class SimulatedTransport(Transport):
         # --- metadata scans (shared per source site) -------------------------
         for src, xs in by_src.items():
             site = self.graph.sites[src]
-            rate = site.scan_files_per_s / max(1, len(xs))
+            rate = shared_scan_rate(site, len(xs))
             for x in xs:
                 if x.dataset.files > site.scan_mem_limit_files:
                     x.status = Status.FAILED
                     x.faults += 1
                     x.detail = FaultKind.OOM_SCAN.value
                     x.completed_at = now
+                    self._log_fault((x.source, x.destination))
                     self.notifier.notify(
                         f"scan OOM on {src} for {x.dataset.path} "
                         f"({x.dataset.files} files) — split into smaller requests",
                         x.dataset.path)
                     continue
-                x.scan_files_left -= rate * dt
+                avail = dt
+                if x.setup_left > 0:         # task dispatch precedes the scan
+                    used = min(x.setup_left, avail)
+                    x.setup_left -= used
+                    avail -= used
+                    if avail <= 0:
+                        continue
+                x.scan_files_left -= rate * avail
                 if x.scan_files_left <= 0:
                     x.phase = "move"
 
@@ -327,6 +370,7 @@ class SimulatedTransport(Transport):
                 x.faults += 1
                 x.detail = FaultKind.PERMISSION.value
                 x.completed_at = self.clock.now
+                self._log_fault((x.source, x.destination))
                 self.notifier.notify(
                     f"permission failure (unreadable files) in {x.dataset.path}",
                     x.dataset.path)
@@ -354,6 +398,7 @@ class SimulatedTransport(Transport):
                 x.fault_marks.pop(0)
                 x.faults += 1
                 x.stall_left += self.retry.fault_retry_cost_s
+                self._log_fault((x.source, x.destination))
                 continue
             if halt is not None and nxt >= halt:
                 continue            # halt handled at the top of the loop
@@ -367,8 +412,9 @@ class SimulatedTransport(Transport):
 
     # ------------------------------------------------------------ checkpoints
     _XFER_SCALARS = ("source", "destination", "submitted_at", "phase",
-                     "scan_files_left", "bytes_done", "active_s", "faults",
-                     "stall_left", "completed_at", "detail")
+                     "setup_left", "scan_files_left", "bytes_done",
+                     "active_s", "faults", "stall_left", "completed_at",
+                     "detail")
     _STATE_SCALARS = ("bytes_done", "files_done", "dirs_done", "faults",
                       "rate", "detail")
 
@@ -402,7 +448,12 @@ class SimulatedTransport(Transport):
             archive.append(e)
         return {"last_tick": self._last_tick, "live": live, "archive": archive,
                 "flow": [[day, src, dst, v]
-                         for (day, (src, dst)), v in self.flow_totals.items()]}
+                         for (day, (src, dst)), v in self.flow_totals.items()],
+                "route_bytes": [[src, dst, v]
+                                for (src, dst), v in self._route_bytes.items()],
+                "route_faults": [[src, dst, n]
+                                 for (src, dst), n in
+                                 self._route_faults.items()]}
 
     def load_state_dict(self, d: dict, catalog: Dict[str, Dataset]) -> None:
         self._last_tick = d["last_tick"]
@@ -423,6 +474,10 @@ class SimulatedTransport(Transport):
             for e in d["archive"]}
         self.flow_totals = {(day, (src, dst)): v
                             for day, src, dst, v in d["flow"]}
+        self._route_bytes = {(src, dst): float(v)
+                             for src, dst, v in d["route_bytes"]}
+        self._route_faults = {(src, dst): int(n)
+                              for src, dst, n in d["route_faults"]}
 
     # ------------------------------------------------------- next-event hints
     def next_event_hint(self) -> float:
@@ -449,12 +504,13 @@ class SimulatedTransport(Transport):
                 movers.append(x)
         for src, xs in scanners_by_src.items():
             site = self.graph.sites[src]
-            rate = site.scan_files_per_s / max(1, len(xs))
+            rate = shared_scan_rate(site, len(xs))
             for x in xs:
                 if x.dataset.files > site.scan_mem_limit_files:
                     return 1.0  # OOM fires on the very next tick
                 if rate > 0:
-                    best = min(best, max(0.0, x.scan_files_left / rate))
+                    best = min(best, x.setup_left
+                               + max(0.0, x.scan_files_left / rate))
         route_rate = self._route_rates(movers)
         for x in movers:
             rate = route_rate[(x.source, x.destination)]

@@ -51,14 +51,20 @@ class CrashResumeSpec:
 
 def run_crash_resume(spec: CrashResumeSpec, workdir: str,
                      scale: float = 1.0, seed: int = 0,
-                     n_datasets: Optional[int] = None) -> Dict:
+                     n_datasets: Optional[int] = None,
+                     policy_static: bool = False) -> Dict:
     """Run the three-act kill/resume experiment; returns a report dict whose
-    ``match`` field is the acceptance verdict."""
+    ``match`` field is the acceptance verdict.  ``policy_static`` forces the
+    base scenario onto the naive static per-dataset policy (CLI ``--policy
+    static``)."""
     from repro.scenarios.registry import get_scenario
     base = get_scenario(spec.base)
     if isinstance(base, CrashResumeSpec):
         raise TypeError(f"{spec.name}: base scenario {spec.base!r} is itself "
                         "a crash-resume scenario")
+    if policy_static and hasattr(base, "with_policy"):
+        from repro.control.policy import STATIC_POLICY
+        base = base.with_policy(STATIC_POLICY)
 
     # act 1: the uninterrupted reference trajectory
     world = base.build(scale=scale, seed=seed, n_datasets=n_datasets)
@@ -139,8 +145,16 @@ CRASH_RESUME_FEDERATION = CrashResumeSpec(
                 "and table must resume to identical per-member digests.",
     base="federation-paper-twice", kill_fracs=(0.5,))
 
+CRASH_RESUME_POLICY = CrashResumeSpec(
+    name="crash-resume-policy",
+    description="Kill the adaptive small-file-storm campaign at ~50%: the "
+                "bundle-composer cursor, already-cut bundles, controller "
+                "internals, live route caps, and the policy ledger must "
+                "all resume to a digest-identical trajectory.",
+    base="small-file-storm", kill_fracs=(0.5,))
+
 CRASH_RESUME_SCENARIOS: Dict[str, CrashResumeSpec] = {
     s.name: s for s in (CRASH_RESUME_PAPER, CRASH_RESUME_STORM,
                         CRASH_RESUME_TOPUP, CRASH_RESUME_STEP,
-                        CRASH_RESUME_FEDERATION)
+                        CRASH_RESUME_FEDERATION, CRASH_RESUME_POLICY)
 }

@@ -67,6 +67,8 @@ def _next_event_dt(shared, runtimes, members, finished_at,
             cand.append(rt.start_s - now)  # staggered campaign start
             continue
         cand.append(rt.sched.next_backoff_expiry(now) - now)
+        if rt.control is not None:
+            cand.append(rt.control.next_action(now) - now)
         for t in members[i].fix_at.values():
             if t > now:
                 cand.append(t - now)
@@ -193,6 +195,10 @@ def run_world(world, engine: str = "events",
         active = [i for i, rt in enumerate(runtimes)
                   if finished_at[i] is None and clock.now >= rt.start_s]
         for i in active:
+            # control plane first: top up the bundle feed and let the tuners
+            # adjust caps/targets, so this pass's scheduler step sees them
+            if runtimes[i].control is not None:
+                runtimes[i].control.step(clock.now)
             runtimes[i].sched.step(clock.now)
         for i in active:
             rt, ls = runtimes[i], members[i]
@@ -214,7 +220,8 @@ def run_world(world, engine: str = "events",
                         for _, d in feed.events_since(ls.feed_cursor)
                         if d.path not in rt.catalog)
                     ls.feed_cursor = feed.count()
-            if rt.sched.done() and not ls.pending_top_ups:
+            if (rt.sched.done() and not ls.pending_top_ups
+                    and (rt.control is None or rt.control.exhausted())):
                 _finish(i)
                 just_done.append(i)
         done = all(f is not None for f in finished_at)

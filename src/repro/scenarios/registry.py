@@ -11,6 +11,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.control.policy import TransferPolicySpec
+from repro.core.routes import GB, TB
 from repro.scenarios.crash_resume import (CRASH_RESUME_SCENARIOS,
                                           CrashResumeSpec)
 from repro.scenarios.spec import (CatalogSpec, FaultProfileSpec,
@@ -165,6 +167,80 @@ MEGA_CAMPAIGN = ScenarioSpec(
     max_days=400.0)
 
 
+# -------------------------------------------------- control-plane scenarios
+# The paper's tool moved 28.9 M files by packing them into large Globus
+# tasks; Globus itself tuned concurrency under the covers.  These scenarios
+# make that control plane load-bearing: each declares a TransferPolicySpec
+# and a per-task dispatch cost (``task_setup_s``) that naive one-task-per-
+# dataset scheduling cannot amortize.
+SMALL_FILE_STORM = ScenarioSpec(
+    name="small-file-storm",
+    description="500k tiny files across 2,000 small datasets with a 45 s "
+                "per-task dispatch cost: one task per dataset drowns in "
+                "dispatch overhead; the declared policy bundles the "
+                "catalog into large tasks and AIMD-tunes route concurrency "
+                "(the regime where Globus bundling beat scripted scp).",
+    source="LLNL", replicas=("ALCF", "OLCF"),
+    sites=(_LLNL, _ALCF, _OLCF), routes=_PAPER_ROUTES,
+    catalog=CatalogSpec(n_datasets=2000, total_bytes=2 * TB,
+                        total_files=500_000, unreadable_fraction=0.0),
+    task_setup_s=45.0,
+    policy=TransferPolicySpec(
+        bundling="greedy", controller="aimd",
+        target_files=25_000, target_bytes=200 * GB,
+        max_files=100_000, max_bytes=1 * TB,
+        control_interval_s=3600.0,
+        max_active_per_route=6),
+    max_days=50.0)
+
+MIXED_BUNDLE_PAPER = ScenarioSpec(
+    name="mixed-bundle-paper",
+    description="paper-2022 with per-dataset file manifests: the composer "
+                "packs individual files into size-balanced bundles that "
+                "may span datasets, and the gradient tuner steers future "
+                "bundle sizing from observed throughput.",
+    source="LLNL", replicas=("ALCF", "OLCF"),
+    sites=(_LLNL, _ALCF, _OLCF), routes=_PAPER_ROUTES,
+    outages=_PAPER_OUTAGES,
+    task_setup_s=30.0,
+    policy=TransferPolicySpec(
+        bundling="balanced", granularity="file", controller="gradient",
+        target_files=500_000, target_bytes=100 * TB,
+        max_files=1_500_000, max_bytes=400 * TB,
+        balance_batch=4,
+        control_interval_s=12 * 3600.0),
+    max_days=400.0)
+
+# contention-kneed DTNs: aggregate throughput degrades beyond the knee, so
+# concurrency has a real optimum for the AIMD tuner to find
+_LLNL_KNEE = SiteSpec("LLNL", read_gbps=1.5, write_gbps=1.5,
+                      scan_files_per_s=20_000,
+                      scan_mem_limit_files=2_000_000, concurrency_knee=4)
+_ALCF_KNEE = SiteSpec("ALCF", read_gbps=10.0, write_gbps=10.0,
+                      concurrency_knee=6)
+_OLCF_KNEE = SiteSpec("OLCF", read_gbps=10.0, write_gbps=10.0,
+                      concurrency_knee=6)
+
+LOSSY_ROUTE_TUNING = ScenarioSpec(
+    name="lossy-route-tuning",
+    description="Elevated NETWORK fault intensity over contention-kneed "
+                "DTNs, launched over-parallel (6 transfers/route against a "
+                "source knee of 4): the static baseline thrashes the DTNs "
+                "for the whole campaign; the AIMD tuner observes the "
+                "fault/throughput signal and backs concurrency off toward "
+                "the knee.",
+    source="LLNL", replicas=("ALCF", "OLCF"),
+    sites=(_LLNL_KNEE, _ALCF_KNEE, _OLCF_KNEE), routes=_PAPER_ROUTES,
+    outages=_PAPER_OUTAGES,
+    faults=FaultProfileSpec(transient_per_tb=2.0, fragility_tail=1.9,
+                            max_retries=10, backoff_s=1800.0),
+    max_active_per_route=6,
+    policy=TransferPolicySpec(
+        controller="aimd", control_interval_s=6 * 3600.0,
+        max_active_per_route=8),
+    max_days=400.0)
+
+
 # ------------------------------------------------------ federation scenarios
 # The paper's actual regime: the 29M-file catalog was moved TWICE — to ANL
 # and to ORNL — as two overlapping campaigns contending for the same
@@ -238,7 +314,8 @@ _REGISTRY: Dict[str, ScenarioSpec] = {
     s.name: s for s in (
         PAPER_2022, FOUR_SITE_MESH, DEGRADED_SOURCE, FAULT_STORM,
         FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY, MEGA_CAMPAIGN,
-        PAPER_TO_ALCF, PAPER_TO_OLCF)
+        PAPER_TO_ALCF, PAPER_TO_OLCF,
+        SMALL_FILE_STORM, MIXED_BUNDLE_PAPER, LOSSY_ROUTE_TUNING)
 }
 
 _FEDERATION_REGISTRY: Dict[str, FederationSpec] = {

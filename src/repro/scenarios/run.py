@@ -115,7 +115,8 @@ def _run_crash_family(spec: CrashResumeSpec, args) -> int:
     workdir = args.checkpoint_dir or tempfile.mkdtemp(prefix="crash-resume-")
     t0 = time.time()
     res = run_crash_resume(spec, workdir, scale=args.scale, seed=args.seed,
-                           n_datasets=args.datasets)
+                           n_datasets=args.datasets,
+                           policy_static=args.policy == "static")
     res["wall_s"] = round(time.time() - t0, 3)
     res["checkpoint_dir"] = workdir
     _emit(res, args.json)
@@ -138,6 +139,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--scale", type=float, default=1.0,
                     help="byte/file-count scale factor (1.0 = full 7.3 PB)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", choices=("declared", "static"),
+                    default="declared",
+                    help="transfer policy: the scenario's declared control "
+                         "plane, or 'static' to force the naive per-dataset "
+                         "fixed-concurrency baseline")
     ap.add_argument("--resume", default=None, metavar="DIR",
                     help="resume from the latest snapshot in DIR (scenario, "
                          "seed, scale, and engine come from the snapshot)")
@@ -173,6 +179,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             return 2
         if isinstance(spec, CrashResumeSpec):
             return _run_crash_family(spec, args)
+        if args.policy == "static" and hasattr(spec, "with_policy"):
+            from repro.control.policy import STATIC_POLICY
+            spec = spec.with_policy(STATIC_POLICY)
 
     # install signal routing BEFORE the (potentially slow) world build, so a
     # SIGTERM at any point after startup exits through the checkpoint path

@@ -15,10 +15,15 @@ to a spec or entries in ``repro.scenarios.registry``.
 from __future__ import annotations
 
 import dataclasses
+from collections import ChainMap
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.campaign import CampaignConfig, build_campaign
+from repro.control.bundles import BundleComposer
+from repro.control.plane import ControlPlane
+from repro.control.policy import STATIC_POLICY, TransferPolicySpec
+from repro.core.campaign import (CampaignConfig, build_campaign,
+                                 build_catalog)
 from repro.core.faults import (FaultInjector, FederationNotifier, Notifier,
                                RetryPolicy)
 from repro.core.incremental import IncrementalReplicator, PublishFeed
@@ -37,6 +42,9 @@ class SiteSpec:
     write_gbps: float
     scan_files_per_s: float = 50_000.0
     scan_mem_limit_files: int = 5_000_000
+    # DTN contention knee: concurrent transfers beyond this degrade the
+    # site's aggregate throughput (None = ideal fair share)
+    concurrency_knee: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -115,6 +123,9 @@ class CampaignRuntime:
     start_day: float = 0.0
     incremental: Optional[IncrementalReplicator] = None
     top_up_times: Tuple[float, ...] = ()
+    # the campaign's control plane (bundling + online tuning); None for the
+    # default static per-dataset policy
+    control: Optional[ControlPlane] = None
 
     @property
     def start_s(self) -> float:
@@ -124,6 +135,15 @@ class CampaignRuntime:
     def deadline_s(self) -> float:
         """Absolute sim time at which this campaign times out."""
         return self.start_day * DAY + self.cfg.max_days * DAY
+
+    def binding_catalog(self) -> Dict[str, Dataset]:
+        """Every dataset a live transfer of this campaign may reference:
+        the raw catalog plus any composed bundles — what the transport
+        re-binds mover rows against on resume."""
+        merged = dict(self.catalog)
+        if self.control is not None and self.control.composer is not None:
+            merged.update(self.control.composer.bundle_catalog)
+        return merged
 
 
 @dataclass
@@ -154,6 +174,10 @@ class ScenarioWorld:
     shared: Optional[SharedWorld] = None
     runtime: Optional[CampaignRuntime] = None
 
+    @property
+    def control(self) -> Optional[ControlPlane]:
+        return self.runtime.control if self.runtime is not None else None
+
 
 @dataclass(frozen=True)
 class ScenarioSpec:
@@ -172,6 +196,13 @@ class ScenarioSpec:
     max_days: float = 200.0
     step_s: float = 1800.0                 # fixed-step engine cadence
     max_active_per_route: int = 2
+    # control plane: bundling + online tuning.  The default (per-dataset
+    # tasks, static caps) compiles to NO control plane and replays the
+    # pre-control-plane trajectory bit-identically.
+    policy: TransferPolicySpec = STATIC_POLICY
+    # fixed dispatch cost per transfer task (Globus task setup/queueing);
+    # the term bundling amortizes.  0.0 = the seed model.
+    task_setup_s: float = 0.0
 
     # ------------------------------------------------------------- compilers
     def to_campaign_config(self, scale: float = 1.0, seed: int = 0,
@@ -188,13 +219,15 @@ class ScenarioSpec:
             seed=seed,
             unreadable_fraction=self.catalog.unreadable_fraction,
             human_fix_days=self.human_fix_days,
-            scale=scale)
+            scale=scale,
+            task_setup_s=self.task_setup_s)
 
     def build_graph(self) -> RouteGraph:
         sites = [Site(s.name, read_bw=s.read_gbps * GB,
                       write_bw=s.write_gbps * GB,
                       scan_files_per_s=s.scan_files_per_s,
-                      scan_mem_limit_files=s.scan_mem_limit_files)
+                      scan_mem_limit_files=s.scan_mem_limit_files,
+                      concurrency_knee=s.concurrency_knee)
                  for s in self.sites]
         routes = [Route(r.source, r.destination, r.gbps * GB)
                   for r in self.routes]
@@ -239,23 +272,59 @@ class ScenarioSpec:
                                                     check_interval=DAY)
         runtime.top_up_times = tuple(times)
 
+    def _compose_bundles(self, catalog: Dict[str, Dataset], seed: int,
+                         fresh: bool,
+                         namespace: Optional[str] = None
+                         ) -> Optional[BundleComposer]:
+        """The policy's bundle composer over ``catalog`` (None when the
+        policy keeps per-dataset tasks).  ``fresh`` cuts the initial
+        lookahead; a resume skips it — the restored cursor and already-cut
+        bundles come from the snapshot instead.  ``namespace`` disambiguates
+        bundle paths (federation members pass their unique label)."""
+        pol = self.policy
+        if not pol.enabled or pol.bundling == "dataset":
+            return None
+        if self.top_ups:
+            raise ValueError(
+                f"scenario {self.name!r}: bundling policies and incremental "
+                "top-ups cannot be combined (the composer's item stream is "
+                "fixed at build time)")
+        composer = BundleComposer(catalog, pol, seed=seed,
+                                  namespace=namespace or self.name)
+        if fresh:
+            while (not composer.done
+                   and len(composer.bundle_catalog) < max(1, pol.lookahead)):
+                composer.cut_next()
+        return composer
+
     def build(self, scale: float = 1.0, seed: int = 0,
               n_datasets: Optional[int] = None, table=None) -> ScenarioWorld:
         """Compile the spec onto the campaign wiring, ready to run under
         either the fixed-step or the event-driven engine.  ``table`` accepts
         a restored ``TransferTable`` when resuming from a checkpoint."""
+        self.policy.validate()
         cfg = self.to_campaign_config(scale=scale, seed=seed,
                                       n_datasets=n_datasets)
         injector = FaultInjector(seed=seed,
                                  transient_per_tb=self.faults.transient_per_tb,
                                  fragility_tail=self.faults.fragility_tail)
-        (graph, catalog, clock, pause, transport, table, sched,
+        graph = self.build_graph()
+        catalog = build_catalog(cfg, graph)
+        composer = self._compose_bundles(catalog, seed, fresh=table is None)
+        (graph, sched_catalog, clock, pause, transport, table, sched,
          notifier) = build_campaign(
-            cfg, graph=self.build_graph(), pause=self.build_pause(),
+            cfg, graph=graph, pause=self.build_pause(),
             injector=injector, retry=self.build_retry(),
-            max_active_per_route=self.max_active_per_route, table=table)
+            max_active_per_route=self.max_active_per_route, table=table,
+            catalog=(composer.bundle_catalog if composer is not None
+                     else catalog))
+        control = None
+        if self.policy.enabled:
+            control = ControlPlane(self.policy, sched, transport,
+                                   self.source, self.replicas,
+                                   composer=composer, label=self.name)
         runtime = CampaignRuntime(self, cfg, catalog, table, sched, notifier,
-                                  label=self.name)
+                                  label=self.name, control=control)
         self._attach_top_ups(runtime, scale)
         shared = SharedWorld(graph, clock, pause, transport)
         return ScenarioWorld(self, cfg, graph, catalog, clock, pause,
@@ -277,6 +346,16 @@ class ScenarioSpec:
     def with_faults(self, **changes) -> "ScenarioSpec":
         return dataclasses.replace(
             self, faults=dataclasses.replace(self.faults, **changes))
+
+    def with_policy(self, policy: Optional[TransferPolicySpec] = None,
+                    **changes) -> "ScenarioSpec":
+        """A copy with a different transfer policy: pass a whole
+        ``TransferPolicySpec`` or field overrides on the current one.
+        ``with_policy(STATIC_POLICY)`` is the naive per-dataset baseline."""
+        base = policy if policy is not None else self.policy
+        if changes:
+            base = dataclasses.replace(base, **changes)
+        return dataclasses.replace(self, policy=base)
 
 
 # ================================================================ federation
@@ -326,12 +405,13 @@ class FederationWorld:
         raise KeyError(label)
 
     def merged_catalog(self) -> Dict[str, Dataset]:
-        """Union of member catalogs (shared-path collisions were validated
-        identical at build time) — the transport's dataset re-binding map on
-        resume."""
+        """Union of member catalogs plus every member's composed bundles
+        (bundle paths are namespaced per member, so they never collide;
+        shared raw-path collisions were validated identical at build time)
+        — the transport's dataset re-binding map on resume."""
         merged: Dict[str, Dataset] = {}
         for rt in self.runtimes:
-            merged.update(rt.catalog)
+            merged.update(rt.binding_catalog())
         return merged
 
 
@@ -357,8 +437,16 @@ class FederationSpec:
     description: str
     members: Tuple[FederationMemberSpec, ...]
     shared_sites: Tuple[str, ...] = ()
+    # when set, every member campaign runs under THIS transfer policy
+    # (each member still gets its own control plane, tuning its own
+    # scheduler's caps against the shared transport's telemetry)
+    policy: Optional[TransferPolicySpec] = None
 
     # --------------------------------------------------------------- helpers
+    def with_policy(self, policy: TransferPolicySpec) -> "FederationSpec":
+        """A copy running every member under ``policy``."""
+        return dataclasses.replace(self, policy=policy)
+
     def member_labels(self) -> List[str]:
         labels = []
         for i, m in enumerate(self.members):
@@ -374,6 +462,7 @@ class FederationSpec:
         site_owner: Dict[str, Tuple[SiteSpec, str]] = {}
         route_owner: Dict[Tuple[str, str], Tuple[RouteSpec, str]] = {}
         faults = self.members[0].scenario.faults
+        setup = self.members[0].scenario.task_setup_s
         for m in self.members:
             spec = m.scenario
             if spec.faults != faults:
@@ -381,6 +470,11 @@ class FederationSpec:
                     f"federation {self.name!r}: member {spec.name!r} declares "
                     "a different fault/retry profile; the shared transport "
                     "has one fault injector and one in-transfer retry cost")
+            if spec.task_setup_s != setup:
+                raise ValueError(
+                    f"federation {self.name!r}: member {spec.name!r} declares "
+                    f"task_setup_s={spec.task_setup_s}, the shared transport "
+                    f"has one task dispatch cost ({setup})")
             for s in spec.sites:
                 seen = site_owner.get(s.name)
                 if seen is None:
@@ -463,22 +557,37 @@ class FederationSpec:
             fragility_tail=base.faults.fragility_tail)
         fed_notifier = FederationNotifier()
         transport = SimulatedTransport(graph, SimClock(0.0), pause, injector,
-                                       fed_notifier, base.build_retry())
+                                       fed_notifier, base.build_retry(),
+                                       task_setup_s=base.task_setup_s)
         shared = SharedWorld(graph, transport.clock, pause, transport)
         runtimes: List[CampaignRuntime] = []
         merged: Dict[str, Dataset] = {}
         labels = self.member_labels()
         for i, m in enumerate(self.members):
             spec = m.scenario
+            if self.policy is not None:
+                spec = spec.with_policy(self.policy)
+            spec.policy.validate()
             cfg = spec.to_campaign_config(scale=scale, seed=seed,
                                           n_datasets=n_datasets)
             notifier = Notifier()
-            (_, catalog, _, _, _, table, sched, _) = build_campaign(
+            member_table = tables[i] if tables is not None else None
+            catalog = build_catalog(cfg, graph)
+            composer = spec._compose_bundles(catalog, seed,
+                                             fresh=member_table is None,
+                                             namespace=labels[i])
+            (_, _, _, _, _, table, sched, _) = build_campaign(
                 cfg, graph=graph, retry=spec.build_retry(),
                 max_active_per_route=spec.max_active_per_route,
-                table=tables[i] if tables is not None else None,
-                transport=transport, notifier=notifier)
-            fed_notifier.attach(catalog, notifier)
+                table=member_table,
+                transport=transport, notifier=notifier,
+                catalog=(composer.bundle_catalog if composer is not None
+                         else catalog))
+            control = None
+            if spec.policy.enabled:
+                control = ControlPlane(spec.policy, sched, transport,
+                                       spec.source, spec.replicas,
+                                       composer=composer, label=labels[i])
             for path, ds in catalog.items():
                 other = merged.get(path)
                 if other is None:
@@ -491,7 +600,14 @@ class FederationSpec:
                         "between members — shared paths must describe the "
                         "same data")
             rt = CampaignRuntime(spec, cfg, catalog, table, sched, notifier,
-                                 label=labels[i], start_day=m.start_day)
+                                 label=labels[i], start_day=m.start_day,
+                                 control=control)
+            # route transport notifications (scan OOM, permission halts) by
+            # everything this member may have in flight — bundles included.
+            # ChainMap is a LIVE view: bundles cut mid-campaign route too.
+            route_map = (ChainMap(catalog, composer.bundle_catalog)
+                         if composer is not None else catalog)
+            fed_notifier.attach(route_map, notifier)
             spec._attach_top_ups(rt, scale)
             runtimes.append(rt)
         return FederationWorld(self, shared, runtimes, scale=scale,

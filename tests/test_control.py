@@ -1,0 +1,495 @@
+"""Control-plane tests: bundle composition invariants (hypothesis), packer
+determinism, online controllers, per-route live caps, static-policy
+bit-identity, the adaptive-beats-static acceptance property, kill/resume
+digest-identity with controller/composer state, and the dashboard's
+policy view + ETA guards."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.control import (STATIC_POLICY, BundleComposer, BundleSizeTuner,
+                           ConcurrencyTuner, ControlPlane, TransferPolicySpec)
+from repro.control.policy import GB, TB
+from repro.core.routes import Dataset, Route, RouteGraph, Site
+from repro.core.snapshot import (CampaignKilled, Checkpointer, load_snapshot,
+                                 resume_world, trajectory_summary)
+from repro.core.transfer_table import Status
+from repro.scenarios.events import EngineStats, run_world
+from repro.scenarios.registry import get_scenario, list_scenarios, register
+from repro.scenarios.spec import FederationSpec
+
+
+def _toy_catalog(sizes, files_each=10):
+    return {f"/toy/ds-{i:03d}": Dataset(f"/toy/ds-{i:03d}", int(b),
+                                        files_each, 2)
+            for i, b in enumerate(sizes)}
+
+
+# ------------------------------------------------------- composer invariants
+@pytest.mark.parametrize("bundling", ("greedy", "balanced"))
+def test_composer_partition_and_caps(bundling):
+    catalog = _toy_catalog([5 * GB, 1 * GB, 30 * GB, 2 * GB, 2 * GB,
+                            40 * GB, 1 * GB, 9 * GB])
+    pol = TransferPolicySpec(bundling=bundling, target_bytes=10 * GB,
+                             target_files=1000, max_bytes=10 * GB,
+                             max_files=1000)
+    comp = BundleComposer(catalog, pol, seed=0)
+    bundles = comp.compose_all()
+    assert comp.done
+    # exactly-once partition, byte/file conservation
+    seen = [k for b in bundles for k in comp.members[b.path]]
+    assert sorted(seen) == sorted(catalog)
+    assert sum(b.bytes for b in bundles) == sum(d.bytes
+                                                for d in catalog.values())
+    assert sum(b.files for b in bundles) == sum(d.files
+                                                for d in catalog.values())
+    # caps hold unless a single item already exceeds them
+    for b in bundles:
+        if len(comp.members[b.path]) > 1:
+            assert b.bytes <= pol.max_bytes
+            assert b.files <= pol.max_files
+
+
+def test_composer_file_granularity_conserves_bytes():
+    catalog = _toy_catalog([7 * GB, 3 * GB, 11 * GB], files_each=50)
+    pol = TransferPolicySpec(bundling="balanced", granularity="file",
+                             target_bytes=2 * GB, max_bytes=4 * GB,
+                             target_files=40, max_files=80, balance_batch=3)
+    comp = BundleComposer(catalog, pol, seed=3)
+    bundles = comp.compose_all()
+    assert sum(b.bytes for b in bundles) == sum(d.bytes
+                                                for d in catalog.values())
+    assert sum(b.files for b in bundles) == sum(d.files
+                                                for d in catalog.values())
+    # file items are "<path>#<a>:<b>" manifest runs; one dataset may span
+    # bundles, and expanding every run must cover each file exactly once
+    seen = sorted((path, i)
+                  for b in bundles for k in comp.members[b.path]
+                  for path, rng in [k.split("#")]
+                  for i in range(*map(int, rng.split(":"))))
+    want = sorted((p, i) for p, d in catalog.items()
+                  for i in range(d.files))
+    assert seen == want
+    # a bundle holds several runs (runs are cut at 1/4 of the caps)
+    assert any(len(comp.members[b.path]) > 1 for b in bundles)
+
+
+def test_composer_deterministic_and_resumable():
+    catalog = _toy_catalog([5 * GB, 1 * GB, 30 * GB, 2 * GB, 8 * GB,
+                            40 * GB], files_each=20)
+    pol = TransferPolicySpec(bundling="greedy", target_bytes=9 * GB,
+                             max_bytes=9 * GB)
+    a = BundleComposer(catalog, pol, seed=1)
+    ref = [dataclasses.astuple(b) for b in a.compose_all()]
+    b = BundleComposer(catalog, pol, seed=1)
+    assert [dataclasses.astuple(x) for x in b.compose_all()] == ref
+    # cut half, serialize, restore into a fresh composer, finish: identical
+    c = BundleComposer(catalog, pol, seed=1)
+    got = [dataclasses.astuple(x) for x in c.cut_next()]
+    state = json.loads(json.dumps(c.state_dict()))     # through JSON
+    d = BundleComposer(catalog, pol, seed=1)
+    d.load_state_dict(state)
+    while not d.done:
+        got.extend(dataclasses.astuple(x) for x in d.cut_next())
+    assert got == ref
+
+
+def test_composer_property_hypothesis():
+    pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis not installed (see requirements-dev.txt)")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @given(st.lists(st.integers(min_value=1, max_value=64 * GB),
+                    min_size=1, max_size=24),
+           st.integers(min_value=1 * GB, max_value=16 * GB),
+           st.integers(min_value=1, max_value=200),
+           st.sampled_from(("greedy", "balanced")),
+           st.integers(min_value=0, max_value=3))
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def run(sizes, max_bytes, max_files, bundling, seed):
+        catalog = _toy_catalog(sizes, files_each=7)
+        pol = TransferPolicySpec(bundling=bundling, max_bytes=max_bytes,
+                                 target_bytes=max_bytes,
+                                 max_files=max_files, target_files=max_files)
+        comp = BundleComposer(catalog, pol, seed=seed)
+        bundles = comp.compose_all()
+        # every dataset in exactly one bundle
+        seen = sorted(k for b in bundles for k in comp.members[b.path])
+        assert seen == sorted(catalog)
+        # caps hold unless a single item already exceeds them
+        for b in bundles:
+            members = comp.members[b.path]
+            if len(members) > 1:
+                assert b.bytes <= max_bytes
+                assert b.files <= max_files
+        # packing is deterministic for a fixed seed
+        again = BundleComposer(catalog, pol, seed=seed)
+        assert ([dataclasses.astuple(b) for b in again.compose_all()]
+                == [dataclasses.astuple(b) for b in bundles])
+
+    run()
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="granularity"):
+        TransferPolicySpec(granularity="file").validate()
+    with pytest.raises(ValueError, match="bundling"):
+        TransferPolicySpec(bundling="magic").validate()
+    with pytest.raises(ValueError, match="controller"):
+        TransferPolicySpec(controller="aimd+nope").validate()
+    TransferPolicySpec(bundling="greedy", controller="aimd+gradient") \
+        .validate()
+    # bundling + incremental top-ups is rejected at build time
+    spec = get_scenario("incremental-top-up").with_policy(bundling="greedy")
+    with pytest.raises(ValueError, match="top-ups"):
+        spec.build(scale=0.004, n_datasets=8)
+
+
+# ------------------------------------------------------------- controllers
+class _FakePlane:
+    def __init__(self, composer=None, default=2):
+        self.caps = {}
+        self.default = default
+        self.composer = composer
+
+    def route_cap(self, route):
+        return self.caps.get(route, self.default)
+
+    def set_route_cap(self, route, cap):
+        self.caps[route] = cap
+
+
+def test_aimd_increase_then_backoff():
+    pol = TransferPolicySpec(controller="aimd", min_active_per_route=1,
+                             max_active_per_route=6, fault_budget=8,
+                             drop_fraction=0.15)
+    tuner = ConcurrencyTuner(pol)
+    plane = _FakePlane()
+    r = ("LLNL", "ALCF")
+    # steady throughput: additive increase, one slot per interval
+    assert tuner.act(0.0, 3600.0, {r: (100 * GB, 0)}, plane)
+    assert plane.route_cap(r) == 3
+    tuner.act(3600.0, 3600.0, {r: (200 * GB, 0)}, plane)
+    assert plane.route_cap(r) == 4
+    # fault spike: multiplicative decrease
+    tuner.act(7200.0, 3600.0, {r: (300 * GB, 20)}, plane)
+    assert plane.route_cap(r) == 2
+    # throughput collapse: halve again toward the floor
+    tuner.act(10800.0, 3600.0, {r: (310 * GB, 20)}, plane)
+    assert plane.route_cap(r) == 1
+    # state round-trips through JSON
+    back = ConcurrencyTuner(pol)
+    back.load_state_dict(json.loads(json.dumps(tuner.state_dict())))
+    assert back._last == tuner._last and back._last_tput == tuner._last_tput
+
+
+def test_gradient_tuner_reverses_on_drop():
+    catalog = _toy_catalog([50 * GB] * 20)
+    pol = TransferPolicySpec(bundling="greedy", controller="gradient",
+                             target_bytes=10 * GB, max_bytes=1 * TB,
+                             min_target_bytes=1 * GB,
+                             target_files=1000, max_files=100_000,
+                             min_target_files=10, bundle_growth=1.5)
+    comp = BundleComposer(catalog, pol, seed=0)
+    tuner = BundleSizeTuner(pol)
+    plane = _FakePlane(composer=comp)
+    r = ("LLNL", "ALCF")
+    assert tuner.act(0.0, 3600.0, {r: (0 * GB, 0)}, plane) == []  # anchor
+    t0 = comp.target_bytes
+    tuner.act(3600.0, 3600.0, {r: (100 * GB, 0)}, plane)
+    assert comp.target_bytes > t0                    # growing
+    grown = comp.target_bytes
+    tuner.act(7200.0, 3600.0, {r: (120 * GB, 0)}, plane)  # tput fell 100->20
+    assert comp.target_bytes < grown                 # direction reversed
+    # floors/ceilings hold under repeated reversals
+    for k in range(20):
+        tuner.act(10800.0 + k, 3600.0, {r: (120 * GB + k, 0)}, plane)
+        assert pol.min_target_bytes <= comp.target_bytes <= pol.max_bytes
+        assert pol.min_target_files <= comp.target_files <= pol.max_files
+
+
+def test_scheduler_honors_live_route_caps():
+    spec = get_scenario("paper-2022")
+    world = spec.build(scale=0.05, seed=0, n_datasets=12)
+    r = ("LLNL", "ALCF")
+    world.sched.policy.route_caps[r] = 5
+    world.sched.step(0.0)
+    assert world.table.count_route(*r, Status.ACTIVE) == 5
+    assert world.table.count_route("LLNL", "OLCF", Status.ACTIVE) <= 2
+
+
+# ------------------------------------------------- static-policy bit-identity
+def test_default_policy_builds_no_control_plane():
+    world = get_scenario("paper-2022").build(scale=0.004, n_datasets=8)
+    assert world.control is None and world.runtime.control is None
+    # an explicit STATIC_POLICY is the same declaration as the default
+    assert get_scenario("paper-2022").with_policy(STATIC_POLICY) \
+        == get_scenario("paper-2022")
+
+
+@pytest.mark.parametrize("engine", ("events", "step"))
+def test_static_policy_run_is_bit_identical(engine):
+    """Acceptance: forcing STATIC_POLICY onto a policy scenario replays the
+    same trajectory as building the identical workload with no policy
+    machinery at all (both engines, digest included)."""
+    spec = get_scenario("small-file-storm")
+    naive = spec.with_policy(STATIC_POLICY)
+    assert not naive.policy.enabled
+    results = []
+    for s in (naive, dataclasses.replace(naive)):
+        world = s.build(scale=0.05, seed=0, n_datasets=48)
+        assert world.control is None
+        stats = EngineStats()
+        rep = run_world(world, engine=engine, stats=stats)
+        results.append(trajectory_summary(rep, stats, world.table))
+    assert results[0] == results[1]
+    assert results[0]["succeeded_digest"]
+
+
+# -------------------------------------------------- adaptive beats static
+def test_adaptive_beats_static_on_small_file_storm():
+    """Acceptance: bundling + AIMD must finish the small-file catalog in no
+    more simulated campaign days than naive per-dataset scheduling."""
+    days = {}
+    for label in ("adaptive", "static"):
+        spec = get_scenario("small-file-storm")
+        if label == "static":
+            spec = spec.with_policy(STATIC_POLICY)
+        rep = run_world(spec.build(scale=0.1, seed=0, n_datasets=96),
+                        engine="events", stats=EngineStats())
+        days[label] = rep.duration_days
+        for got in rep.bytes_at.values():
+            assert got >= rep.total_bytes * 0.999
+    assert days["adaptive"] < days["static"]
+
+
+def test_lossy_route_tuning_backs_off_concurrency():
+    """Over-parallel start past the DTN knee: the AIMD tuner must act (the
+    ledger records decisions) and must not lose to the static baseline."""
+    spec = get_scenario("lossy-route-tuning")
+    world = spec.build(scale=0.1, seed=0, n_datasets=32)
+    assert world.control is not None
+    rep = run_world(world, engine="events", stats=EngineStats())
+    decisions = [e for e in world.control.ledger.entries
+                 if e["controller"] == "aimd"]
+    assert decisions, "AIMD never acted"
+    assert any(e["cap"] < e["prev_cap"] for e in decisions), \
+        "AIMD never backed off despite the contention knee"
+    static = run_world(
+        spec.with_policy(STATIC_POLICY).build(scale=0.1, seed=0,
+                                              n_datasets=32),
+        engine="events", stats=EngineStats())
+    assert rep.duration_days <= static.duration_days
+
+
+# ---------------------------------------------------------- kill/resume
+@pytest.mark.parametrize("name,overrides", [
+    ("small-file-storm", dict(scale=0.2, n_datasets=200)),
+    ("lossy-route-tuning", dict(scale=0.1, n_datasets=32)),
+    ("mixed-bundle-paper", dict(scale=0.01, n_datasets=16)),
+])
+def test_kill_resume_under_adaptive_policy(tmp_path, name, overrides):
+    """Acceptance: kill at ~50% under ANY policy and resume digest-identical
+    — including restored composer cursor, controller state, and caps."""
+    spec = get_scenario(name)
+    world = spec.build(seed=0, **overrides)
+    stats = EngineStats()
+    rep = run_world(world, stats=stats)
+    ref = trajectory_summary(rep, stats, world.table)
+    ref_ledger = (world.control.ledger.entries
+                  if world.control is not None else [])
+
+    world2 = spec.build(seed=0, **overrides)
+    ck = Checkpointer(str(tmp_path), kill_after=max(1, stats.iterations // 2))
+    with pytest.raises(CampaignKilled):
+        run_world(world2, stats=EngineStats(), checkpointer=ck)
+    snap = load_snapshot(str(tmp_path))
+    assert snap.version == 2 and snap.control is not None
+    w3, snap2, loop = resume_world(str(tmp_path))
+    assert w3.control is not None
+    stats3 = EngineStats()
+    rep3 = run_world(w3, engine=snap2.engine, stats=stats3, resume=loop)
+    assert trajectory_summary(rep3, stats3, w3.table) == ref
+    assert (w3.control.ledger.entries
+            if w3.control is not None else []) == ref_ledger
+
+
+def test_static_forced_run_resumes(tmp_path):
+    """A checkpoint written under the forced static baseline of an
+    adaptive-by-default scenario must resume (the snapshot records the
+    override; rebuilding with the registry's declared policy would fail)."""
+    spec = get_scenario("small-file-storm").with_policy(STATIC_POLICY)
+    world = spec.build(scale=0.05, seed=0, n_datasets=64)
+    stats = EngineStats()
+    rep = run_world(world, stats=stats)
+    ref = trajectory_summary(rep, stats, world.table)
+
+    world2 = spec.build(scale=0.05, seed=0, n_datasets=64)
+    ck = Checkpointer(str(tmp_path), kill_after=max(1, stats.iterations // 2))
+    with pytest.raises(CampaignKilled):
+        run_world(world2, stats=EngineStats(), checkpointer=ck)
+    assert load_snapshot(str(tmp_path)).policy_static
+    # registry lookup path — NOT passing spec= — must re-apply the override
+    w3, snap, loop = resume_world(str(tmp_path))
+    assert w3.control is None
+    stats3 = EngineStats()
+    rep3 = run_world(w3, engine=snap.engine, stats=stats3, resume=loop)
+    assert trajectory_summary(rep3, stats3, w3.table) == ref
+
+
+def test_federation_tuner_only_touches_own_routes():
+    """Per-member AIMD over a shared transport: a member must never write
+    caps or ledger entries for routes its own scheduler cannot start."""
+    base = get_scenario("federation-paper-twice")
+    fed = dataclasses.replace(
+        base.with_policy(TransferPolicySpec(
+            controller="aimd", control_interval_s=6 * 3600.0)),
+        name="federation-aimd-routes-test")
+    register(fed)
+    world = fed.build(scale=0.05, seed=0, n_datasets=10)
+    run_world(world, engine="events", stats=EngineStats())
+    for rt in world.runtimes:
+        own = {rt.spec.source, *rt.spec.replicas}
+        for (src, dst) in rt.sched.policy.route_caps:
+            assert dst in rt.spec.replicas and src in own, (rt.label, src,
+                                                           dst)
+        for e in rt.control.ledger.entries:
+            if "route" in e:
+                assert tuple(e["route"])[1] in rt.spec.replicas, (rt.label, e)
+
+
+def test_crash_resume_policy_scenario(tmp_path):
+    from repro.scenarios.crash_resume import run_crash_resume
+    spec = get_scenario("crash-resume-policy")
+    res = run_crash_resume(spec, str(tmp_path), seed=0, scale=0.2,
+                           n_datasets=200)
+    assert res["kills"]
+    assert res["match"], (res["reference"], res["resumed"])
+
+
+def test_federation_with_policy_override_and_resume(tmp_path):
+    """A federation forcing one adaptive policy onto every member: bundles
+    are namespaced per member, both members complete, and kill/resume is
+    digest-identical (per-member control blocks restored)."""
+    from repro.scenarios.crash_resume import run_crash_resume
+    base = get_scenario("federation-paper-twice")
+    fed = dataclasses.replace(
+        base.with_policy(TransferPolicySpec(
+            bundling="greedy", controller="aimd",
+            target_bytes=5 * TB, max_bytes=20 * TB,
+            target_files=200_000, max_files=1_500_000,
+            control_interval_s=12 * 3600.0)),
+        name="federation-policy-test")
+    register(fed)
+    world = fed.build(scale=0.01, seed=0, n_datasets=10)
+    for rt in world.runtimes:
+        assert rt.control is not None and rt.control.composer is not None
+    paths = [p for rt in world.runtimes
+             for p in rt.control.composer.bundle_catalog]
+    assert any(p.startswith("/bundle/alcf/") for p in paths)
+    assert any(p.startswith("/bundle/olcf/") for p in paths)
+    from repro.scenarios.crash_resume import CrashResumeSpec
+    res = run_crash_resume(
+        CrashResumeSpec(name="crash-fed-policy", description="",
+                        base="federation-policy-test", kill_fracs=(0.5,)),
+        str(tmp_path), seed=0, scale=0.01, n_datasets=10)
+    assert res["kills"]
+    assert res["match"], (res["reference"], res["resumed"])
+
+
+# ------------------------------------------------------- transport plumbing
+def test_task_setup_delays_scan():
+    from repro.core.faults import FaultInjector, Notifier
+    from repro.core.pause import PauseManager
+    from repro.core.transport import SimClock, SimulatedTransport
+
+    graph = RouteGraph(
+        [Site("A", read_bw=GB, write_bw=GB, scan_files_per_s=100.0),
+         Site("B", read_bw=GB, write_bw=GB)],
+        [])
+    clock = SimClock(0.0)
+    tr = SimulatedTransport(graph, clock, PauseManager(), FaultInjector(),
+                            Notifier(), task_setup_s=50.0)
+    uid = tr.submit(Dataset("/d", 10, 10_000, 1), "A", "B")
+    clock.advance(30.0)
+    tr.tick()                       # 30 s: still inside the dispatch window
+    x = tr._live[uid]
+    assert x.phase == "scan" and x.setup_left == pytest.approx(20.0)
+    assert x.scan_files_left == 10_000.0
+    clock.advance(30.0)
+    tr.tick()                       # 20 s of setup + 10 s of scanning
+    assert x.setup_left == 0.0
+    assert x.scan_files_left == pytest.approx(10_000.0 - 10.0 * 100.0)
+    # the hint accounts for remaining setup (none) + scan time
+    assert tr.next_event_hint() == pytest.approx(9_000.0 / 100.0)
+
+
+def test_route_telemetry_accumulates():
+    spec = get_scenario("paper-2022")
+    world = spec.build(scale=0.02, seed=0, n_datasets=8)
+    run_world(world, engine="events", stats=EngineStats())
+    tel = world.transport.route_telemetry()
+    assert tel
+    total = sum(b for b, _ in tel.values())
+    moved = sum(v for v in world.transport.flow_totals.values())
+    assert total == pytest.approx(moved)
+
+
+def test_contention_knee_degrades_effective_rate():
+    g = RouteGraph(
+        [Site("A", read_bw=10 * GB, write_bw=10 * GB, concurrency_knee=2),
+         Site("B", read_bw=10 * GB, write_bw=10 * GB)],
+        [Route("A", "B", 100 * GB)])
+    r = ("A", "B")
+    at2 = g.effective_rate(*r, {r: 2})
+    at4 = g.effective_rate(*r, {r: 4})
+    assert at2 == pytest.approx(10 * GB / 2)
+    # beyond the knee the *aggregate* shrinks: 10 GB/s * (2/4) over 4 movers
+    assert at4 == pytest.approx(10 * GB * (2 / 4) / 4)
+    assert 4 * at4 < 2 * at2
+
+
+# ------------------------------------------------------------- dashboard
+def test_progress_rows_never_emit_inf_nan():
+    from repro.core.dashboard import progress_rows
+    from repro.core.transfer_table import TransferTable
+    t = TransferTable()
+    t.populate(["a", "b"], "LLNL", ["ALCF"])
+    # a freshly resumed first tick: ACTIVE rows, zero rate, zero progress
+    t.update("a", "ALCF", status=Status.ACTIVE, uuid="u1", rate=0.0)
+    t.update("b", "ALCF", status=Status.ACTIVE, uuid="u2",
+             rate=float("inf"))          # pathological per-row rate
+    rows = progress_rows([("c", t, ["ALCF"], 100)])
+    json.dumps(rows, allow_nan=False)    # must be JSON-clean
+    (row,) = rows
+    assert row["eta_days"] is None and row["rate"] == 0.0
+    # zero-byte campaign: no division blowups either
+    rows0 = progress_rows([("c", t, ["ALCF"], 0)])
+    json.dumps(rows0, allow_nan=False)
+    assert rows0[0]["complete_fraction"] == 0.0
+
+
+def test_policy_dashboard_rows_and_render():
+    from repro.core.dashboard import policy_rows, render_policy_text
+    spec = get_scenario("lossy-route-tuning")
+    world = spec.build(scale=0.1, seed=0, n_datasets=32)
+    run_world(world, engine="events", stats=EngineStats())
+    rows = policy_rows(world.control)
+    kinds = {r["kind"] for r in rows}
+    assert "caps" in kinds and "decision" in kinds
+    txt = render_policy_text(world.control, world.clock.now)
+    assert "caps" in txt and "aimd" in txt
+    json.dumps(rows, allow_nan=False)
+
+
+def test_new_scenarios_registered():
+    names = list_scenarios()
+    for required in ("small-file-storm", "mixed-bundle-paper",
+                     "lossy-route-tuning"):
+        assert required in names
+    from repro.scenarios.registry import list_crash_scenarios
+    assert "crash-resume-policy" in list_crash_scenarios()
