@@ -33,6 +33,11 @@ verdict, mean write latency, and snapshot size recorded under the
 source-egress cap at every tick, compares the span against the serial
 back-to-back variant, and records everything (per-member digests included)
 under the ``federation`` key of ``BENCH_scenarios.json``.
+
+``--demand-bench`` replays ``esgf-serving`` popular-first (both engines),
+the catalog-order ablation, and the no-traffic comparator, and records the
+serving SLOs plus the popular-first-beats-catalog-order verdict under the
+``demand`` key of ``BENCH_scenarios.json``.
 """
 from __future__ import annotations
 
@@ -269,6 +274,82 @@ def federation_bench(n_datasets: int = 32, seed: int = 0,
     }
 
 
+# demand-bench shape: small enough for CI, enough catalog + traffic that the
+# popular-first ordering measurably moves the serving SLOs
+DEMAND_SHAPE = dict(n_datasets=32, scale=0.02)
+
+
+def demand_bench(seed: int = 0) -> dict:
+    """The demand-engine acceptance experiment: replay esgf-serving
+    popular-first (both engines), the catalog-order ablation, and the
+    no-traffic comparator, recording each arm's determinism tuple
+    (iterations, float-exact sim days, faults, succeeded digest) plus the
+    serving SLOs.  Carries the headline verdicts:
+
+      * ``popular_first_beats_catalog_order`` — popularity-driven
+        replication reaches a better overall hit-rate and an
+        as-early-or-earlier time-to-90%-hit-rate day than catalog-order
+        replication under identical traffic;
+      * ``traffic_tax_ok`` — serving 2M users while replicating costs at
+        most 50% extra campaign days over the no-traffic baseline.
+    """
+    from repro.core.snapshot import trajectory_summary
+    from repro.demand.spec import NO_DEMAND
+    from repro.scenarios.events import EngineStats, run_world
+    from repro.scenarios.registry import get_scenario
+
+    arms = {
+        "popular_first": (get_scenario("esgf-serving"), ("events", "step")),
+        "catalog_order": (get_scenario("popular-first-vs-catalog-order"),
+                          ("events",)),
+        "no_traffic": (get_scenario("esgf-serving").with_demand(NO_DEMAND),
+                       ("events",)),
+    }
+    out = {"seed": seed, "shape": dict(DEMAND_SHAPE), "arms": {}}
+    for label, (spec, engines) in arms.items():
+        for engine in engines:
+            world = spec.build(seed=seed, **DEMAND_SHAPE)
+            stats = EngineStats()
+            t0 = time.time()
+            rep = run_world(world, engine=engine, stats=stats)
+            wall = time.time() - t0
+            traj = trajectory_summary(rep, stats, world.table)
+            key = label if engine == "events" else f"{label}_{engine}"
+            arm = {
+                "wall_s": round(wall, 3),
+                "iterations": stats.iterations,
+                "sim_days": rep.duration_days,
+                "faults_total": rep.faults_total,
+                "quarantined": rep.quarantined,
+                "succeeded_digest": traj["succeeded_digest"],
+            }
+            if world.demand is not None:
+                s = world.demand.summary()
+                arm["serving"] = {
+                    k: s[k] for k in
+                    ("waves", "requests", "hit_rate", "cache_hit_rate",
+                     "source_reads", "p50_s", "p99_s", "day90",
+                     "final_day_hit_rate")}
+            out["arms"][key] = arm
+            print(f"{key:20} {arm['sim_days']:8.3f} d "
+                  f"({arm['wall_s']:.2f}s)"
+                  + (f"  hit={arm['serving']['hit_rate']*100:.1f}% "
+                     f"day90={arm['serving']['day90']} "
+                     f"p99={arm['serving']['p99_s']}s"
+                     if "serving" in arm else ""))
+    pf = out["arms"]["popular_first"]["serving"]
+    co = out["arms"]["catalog_order"]["serving"]
+    inf = float("inf")
+    out["popular_first_beats_catalog_order"] = (
+        pf["hit_rate"] > co["hit_rate"]
+        and (inf if pf["day90"] is None else pf["day90"])
+        <= (inf if co["day90"] is None else co["day90"]))
+    out["traffic_tax_ok"] = (
+        out["arms"]["popular_first"]["sim_days"]
+        <= out["arms"]["no_traffic"]["sim_days"] * 1.5)
+    return out
+
+
 # policy-bench shapes: small enough for CI, large enough that the task-
 # dispatch overhead the control plane amortizes actually dominates static
 POLICY_SHAPES = {
@@ -367,6 +448,10 @@ def main():
                          "against the static per-dataset baseline on the "
                          "policy scenarios and record it in "
                          "BENCH_scenarios.json")
+    ap.add_argument("--demand-bench", action="store_true",
+                    help="compare popular-first vs catalog-order vs "
+                         "no-traffic serving on esgf-serving and record it "
+                         "in BENCH_scenarios.json")
     ap.add_argument("--federation-bench", action="store_true",
                     help="benchmark the overlapped two-campaign federation "
                          "vs its serial variant (both engines, source-cap "
@@ -391,6 +476,11 @@ def main():
     if args.policy_bench:
         doc = policy_bench()
         emit_bench([], path=args.bench_out, extra={"policy": doc})
+        print(json.dumps(doc, indent=2))
+        return
+    if args.demand_bench:
+        doc = demand_bench()
+        emit_bench([], path=args.bench_out, extra={"demand": doc})
         print(json.dumps(doc, indent=2))
         return
     if args.federation_bench:

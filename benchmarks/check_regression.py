@@ -66,6 +66,7 @@ def check(baseline: dict, candidate: dict, max_regress: float) -> list:
     _wall_gate("paper-2022", base, cand, max_regress, fails)
     fails.extend(check_federation(baseline, candidate, max_regress))
     fails.extend(check_policy(baseline, candidate))
+    fails.extend(check_demand(baseline, candidate))
     return fails
 
 
@@ -114,6 +115,68 @@ def check_policy(baseline: dict, candidate: dict) -> list:
             f"baseline on small-file-storm: adaptive "
             f"{storm.get('adaptive', {}).get('sim_days')} d vs static "
             f"{storm.get('static', {}).get('sim_days')} d")
+    return fails
+
+
+def check_demand(baseline: dict, candidate: dict) -> list:
+    """Demand-engine gate: every demand-bench arm must reproduce the
+    baseline's determinism tuple exactly — iterations, float-exact simulated
+    days, fault totals, the succeeded-set digest, and the serving SLOs —
+    and two scenario-level invariants must hold on the candidate itself:
+    popular-first replication beats catalog-order on hit-rate and
+    time-to-90%-hit-rate under identical traffic, and serving the traffic
+    costs at most 50% extra campaign days over the no-traffic baseline.
+    The steady-state serving floor (final-day hit-rate >= 0.9) is pinned on
+    the popular-first arm."""
+    fails = []
+    base = baseline.get("demand")
+    if base is None:
+        return []               # pre-demand baseline: nothing to gate
+    cand = candidate.get("demand")
+    if cand is None:
+        return ["candidate is missing the demand block "
+                "(run benchmarks/campaign_replay.py --demand-bench)"]
+    if base.get("seed") != cand.get("seed") or \
+            base.get("shape") != cand.get("shape"):
+        return [f"demand benchmark shapes differ: baseline "
+                f"seed={base.get('seed')}/shape={base.get('shape')} vs "
+                f"candidate seed={cand.get('seed')}/shape={cand.get('shape')}"]
+    for arm, b_arm in base.get("arms", {}).items():
+        c_arm = cand.get("arms", {}).get(arm)
+        if c_arm is None:
+            fails.append(f"demand arm {arm!r} missing from candidate")
+            continue
+        for key in ("iterations", "sim_days", "faults_total", "quarantined",
+                    "succeeded_digest"):
+            if b_arm.get(key) != c_arm.get(key):
+                fails.append(
+                    f"demand determinism drift in {arm}.{key}: baseline "
+                    f"{b_arm.get(key)} vs candidate {c_arm.get(key)}")
+        if b_arm.get("serving") != c_arm.get("serving"):
+            fails.append(
+                f"demand serving-SLO drift in {arm}: baseline "
+                f"{b_arm.get('serving')} vs candidate "
+                f"{c_arm.get('serving')}")
+    if not cand.get("popular_first_beats_catalog_order"):
+        pf = cand.get("arms", {}).get("popular_first", {}).get("serving", {})
+        co = cand.get("arms", {}).get("catalog_order", {}).get("serving", {})
+        fails.append(
+            "popular-first replication no longer beats catalog-order: "
+            f"hit-rate {pf.get('hit_rate')} (day90 {pf.get('day90')}) vs "
+            f"{co.get('hit_rate')} (day90 {co.get('day90')})")
+    if not cand.get("traffic_tax_ok"):
+        fails.append(
+            "serving traffic costs more than 50% extra campaign days: "
+            f"popular-first "
+            f"{cand.get('arms', {}).get('popular_first', {}).get('sim_days')}"
+            " d vs no-traffic "
+            f"{cand.get('arms', {}).get('no_traffic', {}).get('sim_days')} d")
+    floor = (cand.get("arms", {}).get("popular_first", {})
+             .get("serving", {}).get("final_day_hit_rate", 0.0))
+    if floor < 0.9:
+        fails.append(
+            "esgf-serving steady-state hit-rate fell below the 0.9 floor: "
+            f"final-day hit-rate {floor}")
     return fails
 
 

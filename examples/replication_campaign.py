@@ -12,6 +12,8 @@ Watch for the paper's phases: LLNL->ALCF primary flow, re-route to OLCF
 during ALCF maintenance, ALCF->OLCF relay traffic, permission-failure
 quarantine + human fix, and termination with all replicas complete — or,
 for a federation, two campaigns contending for the same source egress.
+Demand scenarios (``--scenario esgf-serving``) additionally report the
+serving hit-rate and p99 read latency as user traffic rides the campaign.
 """
 import argparse
 import os
@@ -20,7 +22,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.campaign import FederationReport
-from repro.core.dashboard import render_federation_text, render_text
+from repro.core.dashboard import (render_demand_text, render_federation_text,
+                                  render_text)
 from repro.core.pause import DAY
 from repro.scenarios.events import run_world
 from repro.scenarios.registry import (get_scenario, list_federations,
@@ -42,17 +45,25 @@ def _observer(world, args, total, state):
         if args.dashboard:
             print(render_text(world.table, list(world.cfg.replicas), total,
                               now, campaign=world.spec.name))
+            if world.demand is not None:
+                print(render_demand_text(world.demand, now))
             return
         done_by = {r: len(world.table.succeeded_set(r))
                    for r in world.cfg.replicas}
         paused = " ".join(
             f"{s}:{'P' if world.pause.paused(s, now) else '-'}"
             for s in world.graph.sites)
+        serving = ""
+        if world.demand is not None:
+            s = world.demand.summary()
+            serving = (f"  hit={s['hit_rate']*100:.0f}%"
+                       f" p99={s['p99_s']:.1f}s")
         print(f"[day {day:3d}] "
               + "  ".join(f"{r} {n}/{len(world.catalog)}"
                           for r, n in done_by.items())
               + f"  [{paused}]"
-              f"  notifications={len(world.notifier.notifications)}")
+              f"  notifications={len(world.notifier.notifications)}"
+              + serving)
     return observer
 
 
@@ -111,6 +122,13 @@ def main():
         print(f"\ncampaign finished in {rep.duration_days:.1f} simulated "
               f"days (floor {rep.floor_days:.1f} d); "
               f"done={world.sched.done()}")
+        if world.demand is not None:
+            s = world.demand.summary()
+            day90 = "-" if s["day90"] is None else f"day {s['day90']}"
+            print(f"served {s['requests']:,} user requests: "
+                  f"hit-rate {s['hit_rate']*100:.1f}% "
+                  f"(90% reached {day90}), p99 {s['p99_s']:.1f}s, "
+                  f"{s['bytes_served_tb']:.1f} TB from replicas")
 
 
 if __name__ == "__main__":

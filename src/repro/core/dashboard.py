@@ -118,6 +118,8 @@ def render_federation_text(world, now: float) -> str:
     for rt in world.runtimes:
         if rt.control is not None:
             lines.append(render_policy_text(rt.control, now))
+        if rt.demand is not None:
+            lines.append(render_demand_text(rt.demand, now))
     return "\n".join(lines)
 
 
@@ -170,6 +172,48 @@ def render_policy_text(control, now: float) -> str:
                     f"{_fmt_bytes(r['target_bytes'])}")
             lines.append(f"t={r['t_day']:.2f}d {r['controller']:8} {what} "
                          f"({r['gbps']:.3f} GB/s)")
+    return "\n".join(lines)
+
+
+# ------------------------------------------------------- demand-engine view
+def demand_rows(demand) -> List[Dict]:
+    """The demand engine's serving SLOs as dashboard rows: the hit-rate /
+    latency / bytes-served headline, then one cache row per replica site."""
+    s = demand.summary()
+    rows: List[Dict] = [{
+        "campaign": demand.label,
+        "kind": "serving",
+        "users": s["users"],
+        "requests": s["requests"],
+        "hit_rate": s["hit_rate"],
+        "cache_hit_rate": s["cache_hit_rate"],
+        "p50_s": s["p50_s"],
+        "p99_s": s["p99_s"],
+        "bytes_served_tb": s["bytes_served_tb"],
+        "day90": s["day90"],
+    }]
+    for site, c in s["caches"].items():
+        rows.append(dict(c, campaign=demand.label, kind="cache", site=site))
+    return rows
+
+
+def render_demand_text(demand, now: float) -> str:
+    """The serving view as text: SLO line, one cache line per replica."""
+    lines = [f"--- serving [{demand.label}] @ t={now/86400:.2f} d ---"]
+    for r in demand_rows(demand):
+        if r["kind"] == "serving":
+            day90 = "-" if r["day90"] is None else f"{r['day90']}d"
+            lines.append(
+                f"users={r['users']:,} requests={r['requests']:,} "
+                f"hit={r['hit_rate']*100:.1f}% "
+                f"(cache {r['cache_hit_rate']*100:.1f}%) "
+                f"p50={r['p50_s']:.3f}s p99={r['p99_s']:.1f}s "
+                f"served={r['bytes_served_tb']:.1f} TB day90={day90}")
+        else:
+            lines.append(
+                f"cache {r['site']:6} {r['entries']} entries "
+                f"{_fmt_bytes(r['used_bytes'])} hits={r['hits']:,} "
+                f"misses={r['misses']:,} evictions={r['evictions']:,}")
     return "\n".join(lines)
 
 

@@ -39,7 +39,8 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple,
+                    Union)
 
 from repro.core.faults import Notifier, RetryPolicy
 from repro.core.routes import Dataset, RouteGraph
@@ -66,6 +67,14 @@ class ReplicationPolicy:
 OCCUPYING = (Status.ACTIVE, Status.QUEUED, Status.PAUSED)
 _RETRYABLE_SET = frozenset(RETRYABLE)
 
+# direct-queue heap entry: a bare dataset name (dataset order, the seed
+# model) or a (priority, dataset) pair once a priority function is installed
+_DirectEntry = Union[str, Tuple[int, str]]
+
+
+def _entry_ds(entry: _DirectEntry) -> str:
+    return entry if isinstance(entry, str) else entry[1]
+
 
 class ReplicationScheduler:
     def __init__(self, table: TransferTable, transport: Transport,
@@ -81,8 +90,11 @@ class ReplicationScheduler:
         self._backoff_until: Dict[Tuple[str, str], float] = {}
         self._backoff_heap: List[Tuple[float, Tuple[str, str]]] = []
         # per-destination queues of datasets startable direct from the source
-        self._direct: Dict[str, List[str]] = {}
+        self._direct: Dict[str, List[_DirectEntry]] = {}
         self._direct_member: Dict[str, Set[str]] = {}
+        # optional dataset -> priority mapping (lower starts first); installed
+        # by the demand engine to start popular datasets before catalog order
+        self._priority: Optional[Callable[[str], int]] = None
         # per-(destination, donor) relay-candidate queues
         self._relay: Dict[Tuple[str, str], List[str]] = {}
         self._relay_donor: Dict[str, Dict[str, str]] = {}  # dst -> ds -> donor
@@ -102,6 +114,31 @@ class ReplicationScheduler:
     def populate(self) -> int:
         return self.table.populate(
             sorted(self.catalog), self.policy.source, list(self.policy.replicas))
+
+    # --------------------------------------------------------------- priority
+    def set_priority(self, fn: Optional[Callable[[str], int]]) -> None:
+        """Install (or clear, with None) a dataset-priority function for the
+        direct-start queues: lower values start first, ties break in dataset
+        order via the (priority, dataset) heap entry.  Existing entries are
+        re-keyed in place, so this works whether the queues were populated
+        before or after installation."""
+        self._priority = fn
+        self.reprioritize()
+
+    def reprioritize(self) -> None:
+        """Rebuild every direct heap under the current priority function —
+        the demand engine calls this when popularity drifts.  Entry
+        *multiset* is preserved (including lazy-stale entries); only the pop
+        order changes."""
+        for dst, heap in self._direct.items():
+            self._direct[dst] = rebuilt = [
+                self._direct_entry(_entry_ds(e)) for e in heap]
+            heapq.heapify(rebuilt)
+
+    def _direct_entry(self, ds: str) -> _DirectEntry:
+        if self._priority is None:
+            return ds
+        return (int(self._priority(ds)), ds)
 
     # ------------------------------------------------------------------- step
     def step(self, now: float) -> List[str]:
@@ -156,7 +193,8 @@ class ReplicationScheduler:
             member = self._direct_member.setdefault(dst, set())
             if rec.dataset not in member:
                 member.add(rec.dataset)
-                heapq.heappush(self._direct.setdefault(dst, []), rec.dataset)
+                heapq.heappush(self._direct.setdefault(dst, []),
+                               self._direct_entry(rec.dataset))
         donor = self._first_donor(rec.dataset, dst)
         if donor is not None:
             self._relay_add(dst, rec.dataset, donor)
@@ -282,22 +320,23 @@ class ReplicationScheduler:
         heap = self._direct.get(dst)
         if heap:
             member = self._direct_member[dst]
-            deferred: List[str] = []
+            deferred: List[_DirectEntry] = []
             while heap and slots > 0:
-                ds = heapq.heappop(heap)
+                entry = heapq.heappop(heap)
+                ds = _entry_ds(entry)
                 rec = self.table.peek(ds, dst)
                 if (rec is None or rec.status not in _RETRYABLE_SET
                         or rec.source != src):
                     member.discard(ds)             # stale entry
                     continue
                 if self._backoff_active((ds, dst), now):
-                    deferred.append(ds)            # still backing off
+                    deferred.append(entry)         # still backing off
                     continue
                 member.discard(ds)
                 self._start(rec, src, now, actions)
                 slots -= 1
-            for ds in deferred:
-                heapq.heappush(heap, ds)
+            for entry in deferred:
+                heapq.heappush(heap, entry)
         # freshly re-admitted quarantined rows come after the ordinary
         # eligibles, exactly where Figure 4's scan would see them
         for ds in self._readmit_quarantined(dst):
@@ -380,7 +419,8 @@ class ReplicationScheduler:
                               for (ds, dst), t in self._backoff_until.items()],
             "backoff_heap": [[t, ds, dst]
                              for t, (ds, dst) in self._backoff_heap],
-            "direct": {dst: list(h) for dst, h in self._direct.items()},
+            "direct": {dst: [e if isinstance(e, str) else list(e) for e in h]
+                       for dst, h in self._direct.items()},
             "direct_member": {dst: sorted(m)
                               for dst, m in self._direct_member.items()},
             "relay": [[dst, donor, list(h)]
@@ -395,7 +435,9 @@ class ReplicationScheduler:
         with the exact serialized ones)."""
         self._backoff_until = {(ds, dst): t for ds, dst, t in d["backoff_until"]}
         self._backoff_heap = [(t, (ds, dst)) for t, ds, dst in d["backoff_heap"]]
-        self._direct = {dst: list(h) for dst, h in d["direct"].items()}
+        self._direct = {
+            dst: [e if isinstance(e, str) else (int(e[0]), e[1]) for e in h]
+            for dst, h in d["direct"].items()}
         self._direct_member = {dst: set(m)
                                for dst, m in d["direct_member"].items()}
         self._relay = {(dst, donor): list(h) for dst, donor, h in d["relay"]}

@@ -43,8 +43,10 @@ from repro.core.transfer_table import Status, TransferTable
 # v2: adds the control-plane block (bundle-composer cursor + cut bundles,
 # controller internals, live per-route caps, policy ledger) and the
 # transport's per-route telemetry counters + per-task setup cursor
-SNAPSHOT_VERSION = 2
-FEDERATION_SNAPSHOT_VERSION = 2
+# v3: adds the demand block (request-workload RNG + popularity order, read
+# caches, wave cursors, serving counters) and the transport's user read load
+SNAPSHOT_VERSION = 3
+FEDERATION_SNAPSHOT_VERSION = 3
 FEDERATION_KIND = "federation"
 SNAPSHOT_PREFIX = "snapshot-"
 TABLE_PREFIX = "table-"
@@ -119,6 +121,7 @@ class CampaignSnapshot:
     incremental_last_check: float
     admitted_top_ups: List[str]
     control: Optional[dict]       # ControlPlane.state_dict(); None = static
+    demand: Optional[dict]        # DemandEngine.state_dict(); None = no users
     # True when the run forced the static per-dataset baseline (CLI
     # --policy static): resume must re-apply the override instead of
     # rebuilding the registry scenario's declared (possibly adaptive) policy
@@ -214,7 +217,7 @@ class FederationSnapshot:
                          "scheduler", "notifier", "fix_at", "next_snap_day",
                          "timeline", "pending_top_ups", "feed_cursor",
                          "incremental_last_check", "admitted_top_ups",
-                         "control"}
+                         "control", "demand"}
         for r in kw["runtimes"]:
             if set(r) != _RUNTIME_KEYS:
                 raise SnapshotError(
@@ -267,6 +270,8 @@ def capture_snapshot(world, loop: LoopState, engine: str,
                                 if d.path in world.catalog),
         control=(world.control.state_dict()
                  if world.control is not None else None),
+        demand=(world.demand.state_dict()
+                if world.demand is not None else None),
         policy_static=not world.spec.policy.enabled,
     )
 
@@ -297,12 +302,21 @@ def apply_snapshot(world, snap: CampaignSnapshot) -> LoopState:
         # restore the composer cursor / cut bundles BEFORE re-binding the
         # transport's live movers: movers may reference bundle paths
         world.control.load_state_dict(snap.control)
+    if (snap.demand is None) != (world.demand is None):
+        raise SnapshotError(
+            "snapshot and world disagree about the demand engine — the "
+            "scenario's demand spec changed since the snapshot was written")
     world.clock.now = snap.clock_now
     world.transport.injector.load_state_dict(snap.injector)
     world.notifier.load_state_dict(snap.notifier)
     world.sched.load_state_dict(snap.scheduler)
     world.transport.load_state_dict(snap.transport,
                                     world.runtime.binding_catalog())
+    if world.demand is not None:
+        # after the scheduler: its restored direct heaps already carry the
+        # killed run's priorities verbatim, and the replica catalog was
+        # rebuilt by table-listener adoption at build time
+        world.demand.load_state_dict(snap.demand)
     return LoopState(
         iterations=snap.iterations,
         fix_at=dict(snap.fix_at),
@@ -336,6 +350,8 @@ def _capture_runtime(rt, ls: LoopState, table_file: str) -> dict:
                                    if d.path in rt.catalog),
         "control": (rt.control.state_dict()
                     if rt.control is not None else None),
+        "demand": (rt.demand.state_dict()
+                   if rt.demand is not None else None),
     }
 
 
@@ -394,8 +410,14 @@ def _apply_runtime(rt, block: dict) -> LoopState:
             "control plane — the member's transfer policy changed")
     if rt.control is not None:
         rt.control.load_state_dict(block["control"])
+    if (block["demand"] is None) != (rt.demand is None):
+        raise SnapshotError(
+            f"member {rt.label!r}: snapshot and world disagree about the "
+            "demand engine — the member's demand spec changed")
     rt.notifier.load_state_dict(block["notifier"])
     rt.sched.load_state_dict(block["scheduler"])
+    if rt.demand is not None:
+        rt.demand.load_state_dict(block["demand"])
     return LoopState(
         iterations=0,
         fix_at=dict(block["fix_at"]),

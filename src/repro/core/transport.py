@@ -132,6 +132,12 @@ class SimulatedTransport(Transport):
         # bytes moved and transient/persistent faults observed, O(routes)
         self._route_bytes: Dict[Tuple[str, str], float] = {}
         self._route_faults: Dict[Tuple[str, str], int] = {}
+        # user read traffic: owner label -> {site: concurrent reader streams}.
+        # Readers consume the site *read* caps alongside movers (the serving
+        # tier reads the same archive the movers read from) but occupy no
+        # route, so they slow transfers out of a hot site without inventing
+        # bandwidth between sites.
+        self._read_load: Dict[str, Dict[str, int]] = {}
 
     @property
     def live_count(self) -> int:
@@ -220,16 +226,63 @@ class SimulatedTransport(Transport):
 
         return paused
 
+    # destination token for pseudo-routes carrying user reader streams into
+    # the fair-share computation; never a real site name
+    _READERS = "__readers__"
+
+    def set_read_load(self, owner: str, load: Dict[str, int]) -> None:
+        """Register ``owner``'s concurrent user-read streams per site (the
+        demand engine re-registers each admission wave).  An empty ``load``
+        withdraws the owner entirely, so a finished campaign's readers stop
+        taxing the shared transport."""
+        load = {s: int(n) for s, n in load.items() if int(n) > 0}
+        if load:
+            self._read_load[owner] = load
+        else:
+            self._read_load.pop(owner, None)
+
+    def _reader_streams(self) -> Dict[str, int]:
+        """Total user reader streams per site across all owners."""
+        total: Dict[str, int] = {}
+        for load in self._read_load.values():
+            for site, n in load.items():
+                total[site] = total.get(site, 0) + n
+        return total
+
     def _route_rates(self, movers: List[_SimXfer]) -> Dict[Tuple[str, str], float]:
         """Fair-share rate per route for the current mover population —
         computed once per route, shared by the tick advance and the
-        next-event hints so the two can never diverge."""
+        next-event hints so the two can never diverge.  User reader streams
+        are folded in as pseudo-routes ``(site, "__readers__")`` so they
+        contend for the source read caps, but only real mover routes appear
+        in the returned dict."""
         active_by_route: Dict[Tuple[str, str], int] = {}
         for x in movers:
             r = (x.source, x.destination)
             active_by_route[r] = active_by_route.get(r, 0) + 1
+        routes = list(active_by_route)
+        for site, n in self._reader_streams().items():
+            active_by_route[(site, self._READERS)] = n
         return {r: self.graph.effective_rate(r[0], r[1], active_by_route)
-                for r in active_by_route}
+                for r in routes}
+
+    def user_read_rate(self, site: str) -> float:
+        """Fair-share bytes/s one user read stream gets from ``site``'s read
+        cap right now, sharing it with every non-paused mover sourcing there
+        and every other reader stream.  Paused sites serve at their paused
+        fair share of zero concurrency — i.e. the full cap — because the
+        maintenance window stalls movers, not the serving tier's disks."""
+        s = self.graph.sites[site]
+        paused = self._pause_memo(self.clock.now)
+        load = self._reader_streams().get(site, 0)
+        if not paused(site):
+            for x in self._live.values():
+                if (x.phase == "move" and x.source == site
+                        and not paused(x.destination)):
+                    load += 1
+        load = max(1, load)
+        return RouteGraph._contended(s.read_bw, load,
+                                     s.concurrency_knee) / load
 
     # ------------------------------------------------------------------- tick
     def tick(self) -> None:
@@ -446,14 +499,22 @@ class SimulatedTransport(Transport):
             for f in self._STATE_SCALARS:
                 e[f] = getattr(st, f)
             archive.append(e)
-        return {"last_tick": self._last_tick, "live": live, "archive": archive,
-                "flow": [[day, src, dst, v]
-                         for (day, (src, dst)), v in self.flow_totals.items()],
-                "route_bytes": [[src, dst, v]
-                                for (src, dst), v in self._route_bytes.items()],
-                "route_faults": [[src, dst, n]
-                                 for (src, dst), n in
-                                 self._route_faults.items()]}
+        out = {"last_tick": self._last_tick, "live": live, "archive": archive,
+               "flow": [[day, src, dst, v]
+                        for (day, (src, dst)), v in self.flow_totals.items()],
+               "route_bytes": [[src, dst, v]
+                               for (src, dst), v in self._route_bytes.items()],
+               "route_faults": [[src, dst, n]
+                                for (src, dst), n in
+                                self._route_faults.items()]}
+        if self._read_load:
+            # present only when demand traffic is live, so snapshots of
+            # demand-free campaigns are byte-identical to pre-demand ones
+            out["read_load"] = [[owner, site, n]
+                                for owner in sorted(self._read_load)
+                                for site, n in
+                                sorted(self._read_load[owner].items())]
+        return out
 
     def load_state_dict(self, d: dict, catalog: Dict[str, Dataset]) -> None:
         self._last_tick = d["last_tick"]
@@ -478,6 +539,9 @@ class SimulatedTransport(Transport):
                              for src, dst, v in d["route_bytes"]}
         self._route_faults = {(src, dst): int(n)
                               for src, dst, n in d["route_faults"]}
+        self._read_load = {}
+        for owner, site, n in d.get("read_load", ()):
+            self._read_load.setdefault(owner, {})[site] = int(n)
 
     # ------------------------------------------------------- next-event hints
     def next_event_hint(self) -> float:

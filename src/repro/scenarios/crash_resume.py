@@ -153,8 +153,18 @@ CRASH_RESUME_POLICY = CrashResumeSpec(
                 "all resume to a digest-identical trajectory.",
     base="small-file-storm", kill_fracs=(0.5,))
 
+CRASH_RESUME_DEMAND = CrashResumeSpec(
+    name="crash-resume-demand",
+    description="Kill the esgf-serving campaign at ~50% with user traffic "
+                "live: the request-workload RNG, popularity order, read "
+                "caches, wave cursors, prioritized scheduler heaps, and the "
+                "transport's read load must all resume to a digest-identical "
+                "trajectory.",
+    base="esgf-serving", kill_fracs=(0.5,))
+
 CRASH_RESUME_SCENARIOS: Dict[str, CrashResumeSpec] = {
     s.name: s for s in (CRASH_RESUME_PAPER, CRASH_RESUME_STORM,
                         CRASH_RESUME_TOPUP, CRASH_RESUME_STEP,
-                        CRASH_RESUME_FEDERATION, CRASH_RESUME_POLICY)
+                        CRASH_RESUME_FEDERATION, CRASH_RESUME_POLICY,
+                        CRASH_RESUME_DEMAND)
 }

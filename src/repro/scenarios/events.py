@@ -69,6 +69,8 @@ def _next_event_dt(shared, runtimes, members, finished_at,
         cand.append(rt.sched.next_backoff_expiry(now) - now)
         if rt.control is not None:
             cand.append(rt.control.next_action(now) - now)
+        if rt.demand is not None:
+            cand.append(rt.demand.next_wave(now) - now)
         for t in members[i].fix_at.values():
             if t > now:
                 cand.append(t - now)
@@ -180,6 +182,8 @@ def run_world(world, engine: str = "events",
         # holds in flight; trajectory-neutral for a lone campaign (the report
         # reads the table, not the transport archive)
         runtimes[i].sched.teardown()
+        if runtimes[i].demand is not None:
+            runtimes[i].demand.teardown()
 
     while clock.now < horizon:
         # members past their own deadline time out and hand their capacity
@@ -195,8 +199,11 @@ def run_world(world, engine: str = "events",
         active = [i for i, rt in enumerate(runtimes)
                   if finished_at[i] is None and clock.now >= rt.start_s]
         for i in active:
-            # control plane first: top up the bundle feed and let the tuners
-            # adjust caps/targets, so this pass's scheduler step sees them
+            # demand first: an admission wave re-keys priorities and updates
+            # read load, then the control plane tops up the bundle feed and
+            # tunes caps, so this pass's scheduler step sees both
+            if runtimes[i].demand is not None:
+                runtimes[i].demand.step(clock.now)
             if runtimes[i].control is not None:
                 runtimes[i].control.step(clock.now)
             runtimes[i].sched.step(clock.now)

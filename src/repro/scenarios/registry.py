@@ -9,12 +9,14 @@ mid-campaign top-up, and a cold start where relays carry almost everything.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List
 
 from repro.control.policy import TransferPolicySpec
 from repro.core.routes import GB, TB
 from repro.scenarios.crash_resume import (CRASH_RESUME_SCENARIOS,
                                           CrashResumeSpec)
+from repro.demand.spec import DemandSpec
 from repro.scenarios.spec import (CatalogSpec, FaultProfileSpec,
                                   FederationMemberSpec, FederationSpec,
                                   OutageSpec, RouteSpec, ScenarioSpec,
@@ -241,6 +243,59 @@ LOSSY_ROUTE_TUNING = ScenarioSpec(
     max_days=400.0)
 
 
+# ---------------------------------------------------------- demand scenarios
+# The point of the 7.3 PB was never the bytes: it was serving ESGF users
+# from replicas near their compute.  These scenarios add a synthetic user
+# population reading the catalog WHILE it replicates — requests served from
+# whichever replica holds the dataset (else redirected to the slow source),
+# user reads contending with movers for the site read caps, and popularity
+# feeding back into replication order.
+_ESGF_DEMAND = DemandSpec(
+    users=2_000_000,                 # ~ESGF registered-user order of magnitude
+    requests_per_user_day=0.01,      # ~20k dataset reads/day across the fleet
+    zipf_s=1.1,
+    wave_interval_s=6 * 3600.0,
+    request_bytes=4 * GB,
+    cache_bytes=int(1.5 * TB),
+    eviction="lru",
+    prioritize=True)
+
+ESGF_SERVING = PAPER_2022.vary(
+    name="esgf-serving",
+    description="paper-2022 while 2M ESGF users read the catalog: requests "
+                "land on whichever replica holds a dataset (else redirect "
+                "to the slow source), user reads contend with movers for "
+                "the site read caps, and popularity re-orders replication "
+                "popular-first.",
+    demand=_ESGF_DEMAND)
+
+POPULAR_FIRST_VS_CATALOG_ORDER = PAPER_2022.vary(
+    name="popular-first-vs-catalog-order",
+    description="The esgf-serving ablation: identical traffic but "
+                "replication keeps catalog order (no popularity feedback) "
+                "— the comparator that shows what popular-first buys in "
+                "time-to-90%-hit-rate.",
+    demand=dataclasses.replace(_ESGF_DEMAND, prioritize=False))
+
+CACHE_PRESSURE = PAPER_2022.vary(
+    name="cache-pressure",
+    description="Serving under cache pressure: 6M users, 64 GB replica "
+                "caches, popularity-weighted eviction, demand-driven "
+                "warm-ups, and popularity drifting every 20 days.",
+    demand=DemandSpec(
+        users=6_000_000,
+        requests_per_user_day=0.01,
+        zipf_s=1.1,
+        drift_interval_days=20.0,
+        drift_fraction=0.25,
+        wave_interval_s=6 * 3600.0,
+        request_bytes=4 * GB,
+        cache_bytes=64 * GB,
+        eviction="popularity",
+        warm_per_wave=2,
+        prioritize=True))
+
+
 # ------------------------------------------------------ federation scenarios
 # The paper's actual regime: the 29M-file catalog was moved TWICE — to ANL
 # and to ORNL — as two overlapping campaigns contending for the same
@@ -315,7 +370,8 @@ _REGISTRY: Dict[str, ScenarioSpec] = {
         PAPER_2022, FOUR_SITE_MESH, DEGRADED_SOURCE, FAULT_STORM,
         FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY, MEGA_CAMPAIGN,
         PAPER_TO_ALCF, PAPER_TO_OLCF,
-        SMALL_FILE_STORM, MIXED_BUNDLE_PAPER, LOSSY_ROUTE_TUNING)
+        SMALL_FILE_STORM, MIXED_BUNDLE_PAPER, LOSSY_ROUTE_TUNING,
+        ESGF_SERVING, POPULAR_FIRST_VS_CATALOG_ORDER, CACHE_PRESSURE)
 }
 
 _FEDERATION_REGISTRY: Dict[str, FederationSpec] = {
@@ -341,6 +397,30 @@ def list_federations() -> List[str]:
 def list_crash_scenarios() -> List[str]:
     """Names of the crash-resume (kill/resume) scenario family."""
     return sorted(_CRASH_REGISTRY)
+
+
+def scenario_tags(spec) -> List[str]:
+    """Feature tags for a registry entry (``--list`` annotations): which
+    opt-in subsystems the scenario exercises."""
+    tags: List[str] = []
+    if isinstance(spec, CrashResumeSpec):
+        tags.append("crash-resume")
+        spec = get_scenario(spec.base)   # tag by the wrapped base scenario
+    if isinstance(spec, FederationSpec):
+        tags.append("federation")
+        if any(m.scenario.policy.enabled for m in spec.members) or (
+                spec.policy is not None and spec.policy.enabled):
+            tags.append("policy")
+        if any(m.scenario.demand.enabled for m in spec.members):
+            tags.append("demand")
+        return tags
+    if getattr(spec, "policy", None) is not None and spec.policy.enabled:
+        tags.append("policy")
+    if getattr(spec, "demand", None) is not None and spec.demand.enabled:
+        tags.append("demand")
+    if getattr(spec, "top_ups", ()):
+        tags.append("top-ups")
+    return tags
 
 
 def get_scenario(name: str):

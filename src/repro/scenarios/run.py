@@ -40,7 +40,8 @@ from repro.core.snapshot import (CampaignKilled, Checkpointer, SnapshotError,
 from repro.scenarios.crash_resume import CrashResumeSpec, run_crash_resume
 from repro.scenarios.events import EngineStats, run_world
 from repro.scenarios.registry import (get_scenario, list_crash_scenarios,
-                                      list_federations, list_scenarios)
+                                      list_federations, list_scenarios,
+                                      scenario_tags)
 
 EXIT_KILLED = 3
 
@@ -164,7 +165,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         for name in (list_scenarios() + list_federations()
                      + list_crash_scenarios()):
             spec = get_scenario(name)
-            print(f"{name:20} {spec.description}")
+            tags = scenario_tags(spec)
+            annot = f" [{','.join(tags)}]" if tags else ""
+            print(f"{name:32}{annot:28} {spec.description}")
         return 0
     if not args.scenario and not args.resume:
         ap.error("--scenario or --resume is required (or use --list)")
@@ -228,9 +231,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if isinstance(rep, FederationReport):
         out = federation_report_to_dict(rep, stats, time.time() - t0)
         out["trajectory"] = federation_trajectory_summary(rep, stats, world)
+        demand = {rt.label: rt.demand.summary() for rt in world.runtimes
+                  if rt.demand is not None}
+        if demand:
+            out["demand"] = demand
     else:
         out = report_to_dict(rep, stats, time.time() - t0)
         out["trajectory"] = trajectory_summary(rep, stats, world.table)
+        if world.demand is not None:
+            out["demand"] = world.demand.summary()
     out["scenario"] = spec.name
     out["engine"] = engine
     if resumed_from is not None:

@@ -30,6 +30,8 @@ from repro.core.incremental import IncrementalReplicator, PublishFeed
 from repro.core.pause import DAY, PauseManager
 from repro.core.routes import GB, PB, Dataset, Route, RouteGraph, Site
 from repro.core.transport import SimClock, SimulatedTransport
+from repro.demand.engine import DemandEngine
+from repro.demand.spec import NO_DEMAND, DemandSpec
 
 HOUR = 3600.0
 
@@ -126,6 +128,9 @@ class CampaignRuntime:
     # the campaign's control plane (bundling + online tuning); None for the
     # default static per-dataset policy
     control: Optional[ControlPlane] = None
+    # the campaign's demand engine (user traffic + replica serving); None
+    # for the default replication-only campaign
+    demand: Optional[DemandEngine] = None
 
     @property
     def start_s(self) -> float:
@@ -178,6 +183,10 @@ class ScenarioWorld:
     def control(self) -> Optional[ControlPlane]:
         return self.runtime.control if self.runtime is not None else None
 
+    @property
+    def demand(self) -> Optional[DemandEngine]:
+        return self.runtime.demand if self.runtime is not None else None
+
 
 @dataclass(frozen=True)
 class ScenarioSpec:
@@ -203,6 +212,10 @@ class ScenarioSpec:
     # fixed dispatch cost per transfer task (Globus task setup/queueing);
     # the term bundling amortizes.  0.0 = the seed model.
     task_setup_s: float = 0.0
+    # user-traffic demand over the replicated catalog ("ESGF-as-a-service").
+    # The default (zero users) compiles to NO demand engine and replays the
+    # replication-only trajectory bit-identically.
+    demand: DemandSpec = NO_DEMAND
 
     # ------------------------------------------------------------- compilers
     def to_campaign_config(self, scale: float = 1.0, seed: int = 0,
@@ -297,12 +310,31 @@ class ScenarioSpec:
                 composer.cut_next()
         return composer
 
+    def _build_demand(self, catalog: Dict[str, Dataset], table, sched,
+                      transport, seed: int, label: str
+                      ) -> Optional[DemandEngine]:
+        """The spec's demand engine over the built campaign (None when no
+        users are declared).  Users request the *raw* catalog, so demand
+        cannot be combined with bundling policies (bundle rows would
+        materialize paths no user ever asks for)."""
+        if not self.demand.enabled:
+            return None
+        if self.policy.enabled and self.policy.bundling != "dataset":
+            raise ValueError(
+                f"scenario {self.name!r}: demand traffic and bundling "
+                "policies cannot be combined (the replica catalog tracks "
+                "per-dataset rows, bundles materialize composite paths)")
+        return DemandEngine(self.demand, catalog, table, sched, transport,
+                            self.source, self.replicas, seed=seed,
+                            label=label)
+
     def build(self, scale: float = 1.0, seed: int = 0,
               n_datasets: Optional[int] = None, table=None) -> ScenarioWorld:
         """Compile the spec onto the campaign wiring, ready to run under
         either the fixed-step or the event-driven engine.  ``table`` accepts
         a restored ``TransferTable`` when resuming from a checkpoint."""
         self.policy.validate()
+        self.demand.validate()
         cfg = self.to_campaign_config(scale=scale, seed=seed,
                                       n_datasets=n_datasets)
         injector = FaultInjector(seed=seed,
@@ -323,8 +355,11 @@ class ScenarioSpec:
             control = ControlPlane(self.policy, sched, transport,
                                    self.source, self.replicas,
                                    composer=composer, label=self.name)
+        demand = self._build_demand(catalog, table, sched, transport,
+                                    seed, label=self.name)
         runtime = CampaignRuntime(self, cfg, catalog, table, sched, notifier,
-                                  label=self.name, control=control)
+                                  label=self.name, control=control,
+                                  demand=demand)
         self._attach_top_ups(runtime, scale)
         shared = SharedWorld(graph, clock, pause, transport)
         return ScenarioWorld(self, cfg, graph, catalog, clock, pause,
@@ -356,6 +391,16 @@ class ScenarioSpec:
         if changes:
             base = dataclasses.replace(base, **changes)
         return dataclasses.replace(self, policy=base)
+
+    def with_demand(self, demand: Optional[DemandSpec] = None,
+                    **changes) -> "ScenarioSpec":
+        """A copy with a different demand (user-traffic) spec: pass a whole
+        ``DemandSpec`` or field overrides on the current one.
+        ``with_demand(NO_DEMAND)`` is the replication-only baseline."""
+        base = demand if demand is not None else self.demand
+        if changes:
+            base = dataclasses.replace(base, **changes)
+        return dataclasses.replace(self, demand=base)
 
 
 # ================================================================ federation
@@ -568,6 +613,7 @@ class FederationSpec:
             if self.policy is not None:
                 spec = spec.with_policy(self.policy)
             spec.policy.validate()
+            spec.demand.validate()
             cfg = spec.to_campaign_config(scale=scale, seed=seed,
                                           n_datasets=n_datasets)
             notifier = Notifier()
@@ -599,9 +645,11 @@ class FederationSpec:
                         f"federation {self.name!r}: dataset {path!r} differs "
                         "between members — shared paths must describe the "
                         "same data")
+            demand = spec._build_demand(catalog, table, sched, transport,
+                                        seed, label=labels[i])
             rt = CampaignRuntime(spec, cfg, catalog, table, sched, notifier,
                                  label=labels[i], start_day=m.start_day,
-                                 control=control)
+                                 control=control, demand=demand)
             # route transport notifications (scan OOM, permission halts) by
             # everything this member may have in flight — bundles included.
             # ChainMap is a LIVE view: bundles cut mid-campaign route too.

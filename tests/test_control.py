@@ -12,8 +12,9 @@ from repro.control import (STATIC_POLICY, BundleComposer, BundleSizeTuner,
                            ConcurrencyTuner, ControlPlane, TransferPolicySpec)
 from repro.control.policy import GB, TB
 from repro.core.routes import Dataset, Route, RouteGraph, Site
-from repro.core.snapshot import (CampaignKilled, Checkpointer, load_snapshot,
-                                 resume_world, trajectory_summary)
+from repro.core.snapshot import (SNAPSHOT_VERSION, CampaignKilled,
+                                 Checkpointer, load_snapshot, resume_world,
+                                 trajectory_summary)
 from repro.core.transfer_table import Status
 from repro.scenarios.events import EngineStats, run_world
 from repro.scenarios.registry import get_scenario, list_scenarios, register
@@ -308,7 +309,7 @@ def test_kill_resume_under_adaptive_policy(tmp_path, name, overrides):
     with pytest.raises(CampaignKilled):
         run_world(world2, stats=EngineStats(), checkpointer=ck)
     snap = load_snapshot(str(tmp_path))
-    assert snap.version == 2 and snap.control is not None
+    assert snap.version == SNAPSHOT_VERSION and snap.control is not None
     w3, snap2, loop = resume_world(str(tmp_path))
     assert w3.control is not None
     stats3 = EngineStats()

@@ -1,0 +1,359 @@
+"""Demand-engine tests: workload determinism and Zipf shape (hypothesis),
+read-cache eviction disciplines, the table-fed replica catalog, reader/mover
+contention on the site read caps, popular-first scheduler prioritization,
+no-demand bit-identity, and crash-resume digest identity with traffic live.
+"""
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultInjector, Notifier, RetryPolicy
+from repro.core.pause import DAY, PauseManager
+from repro.core.routes import GB, make_catalog, paper_route_graph
+from repro.core.scheduler import ReplicationPolicy, ReplicationScheduler
+from repro.core.transfer_table import Status, TransferTable
+from repro.core.transport import SimClock, SimulatedTransport
+from repro.demand.cache import ReadCache
+from repro.demand.catalog import ReplicaCatalog
+from repro.demand.spec import NO_DEMAND, DemandSpec
+from repro.demand.workload import RequestWorkload
+from repro.scenarios.crash_resume import (CRASH_RESUME_DEMAND,
+                                          run_crash_resume)
+from repro.scenarios.events import EngineStats, run_world
+from repro.scenarios.registry import get_scenario, scenario_tags
+
+SMALL = DemandSpec(users=100_000, requests_per_user_day=0.01,
+                   wave_interval_s=6 * 3600.0)
+
+
+def _workload(n=24, seed=0, spec=SMALL):
+    paths = [f"ds{i:04d}" for i in range(n)]
+    return RequestWorkload(spec, paths, seed=seed)
+
+
+# ------------------------------------------------------------ workload (unit)
+def test_workload_rejects_empty_catalog():
+    with pytest.raises(ValueError):
+        RequestWorkload(SMALL, [], seed=0)
+
+
+def test_workload_rank_roundtrip():
+    wl = _workload()
+    for r in range(wl.n):
+        assert wl.rank_of(wl.path_at_rank(r)) == r
+    # unknown paths (mid-run top-ups) rank below the whole catalog
+    assert wl.rank_of("not-a-dataset") == wl.n
+
+
+def test_workload_probabilities_rank_monotone():
+    p = _workload(n=50).probabilities()
+    assert np.all(np.diff(p) <= 0)          # rank 0 is the hottest
+    assert abs(p.sum() - 1.0) < 1e-9
+
+
+def test_demand_spec_validation():
+    with pytest.raises(ValueError):
+        DemandSpec(users=-1).validate()
+    with pytest.raises(ValueError):
+        DemandSpec(users=10, eviction="fifo").validate()
+    with pytest.raises(ValueError):
+        DemandSpec(users=10, wave_interval_s=0.0).validate()
+    NO_DEMAND.validate()                    # disabled spec is always valid
+    assert not NO_DEMAND.enabled
+
+
+# ----------------------------------------------------- workload (hypothesis)
+def _hypothesis():
+    pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis not installed (see requirements-dev.txt)")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    slow = settings(max_examples=15, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow])
+    return given, slow, st
+
+
+def test_workload_bit_deterministic_per_seed():
+    """Two workloads with the same (spec, catalog, seed) produce identical
+    popularity orders and identical wave samples — the property resume
+    correctness is built on."""
+    given, slow, st = _hypothesis()
+
+    @given(seed=st.integers(0, 10_000), n=st.integers(2, 64),
+           waves=st.integers(1, 6))
+    @slow
+    def prop(seed, n, waves):
+        a, b = _workload(n, seed), _workload(n, seed)
+        assert [a.path_at_rank(r) for r in range(n)] == \
+               [b.path_at_rank(r) for r in range(n)]
+        for w in range(waves):
+            t0, t1 = w * 6 * 3600.0, (w + 1) * 6 * 3600.0
+            np.testing.assert_array_equal(a.sample_wave(t0, t1),
+                                          b.sample_wave(t0, t1))
+    prop()
+
+
+def test_workload_requests_target_existing_datasets():
+    """Every sampled request maps to a rank inside the catalog, and the
+    count vector is exactly catalog-sized — no request can ever reference a
+    dataset the campaign does not replicate."""
+    given, slow, st = _hypothesis()
+
+    @given(seed=st.integers(0, 10_000), n=st.integers(4, 48))
+    @slow
+    def prop(seed, n):
+        wl = _workload(n, seed)
+        paths = set(wl.paths)
+        counts = wl.sample_wave(0.0, DAY)
+        assert counts.shape == (n,)
+        assert int(counts.sum()) >= 0
+        for r in np.flatnonzero(counts):
+            assert wl.path_at_rank(int(r)) in paths
+    prop()
+
+
+def test_workload_drift_preserves_permutation():
+    """Popularity drift reshuffles ranks but the order stays a permutation
+    of the catalog, and drifting is itself bit-deterministic per seed."""
+    given, slow, st = _hypothesis()
+
+    @given(seed=st.integers(0, 10_000), n=st.integers(4, 40),
+           interval=st.floats(0.5, 5.0))
+    @slow
+    def prop(seed, n, interval):
+        spec = DemandSpec(users=10_000, drift_interval_days=interval)
+        a = RequestWorkload(spec, [f"ds{i}" for i in range(n)], seed=seed)
+        b = RequestWorkload(spec, [f"ds{i}" for i in range(n)], seed=seed)
+        for day in (1, 3, 9):
+            assert a.maybe_drift(day * interval * DAY) == \
+                   b.maybe_drift(day * interval * DAY)
+            assert sorted(a._order) == list(range(n))
+            assert [a.path_at_rank(r) for r in range(n)] == \
+                   [b.path_at_rank(r) for r in range(n)]
+        assert a.drifts == b.drifts > 0
+    prop()
+
+
+# ------------------------------------------------------------------- caches
+def test_cache_lru_evicts_least_recently_used():
+    c = ReadCache("ALCF", capacity_bytes=3, eviction="lru")
+    for i, p in enumerate(("a", "b", "c")):
+        assert c.admit(p, 1, rank=i, now=float(i))
+    assert c.touch("a", now=10.0)           # refresh a; b is now LRU
+    assert c.admit("d", 1, rank=3, now=11.0)
+    assert c.contains("a") and not c.contains("b")
+    assert c.evictions == 1
+
+
+def test_cache_popularity_evicts_least_popular():
+    c = ReadCache("ALCF", capacity_bytes=3, eviction="popularity")
+    c.admit("hot", 1, rank=0, now=0.0)
+    c.admit("warm", 1, rank=5, now=1.0)
+    c.admit("cold", 1, rank=90, now=2.0)
+    c.touch("cold", now=50.0)               # recency must not save rank 90
+    assert c.admit("new", 1, rank=2, now=51.0)
+    assert not c.contains("cold")
+    assert c.contains("hot") and c.contains("warm")
+
+
+def test_cache_pin_refuses_when_full():
+    c = ReadCache("ALCF", capacity_bytes=2, eviction="pin")
+    assert c.admit("a", 1, rank=0, now=0.0)
+    assert c.admit("b", 1, rank=1, now=0.0)
+    assert not c.admit("c", 1, rank=2, now=0.0)   # pinned entries never evict
+    assert c.evictions == 0 and len(c) == 2
+
+
+def test_cache_rejects_oversize_and_roundtrips():
+    c = ReadCache("OLCF", capacity_bytes=10, eviction="lru")
+    assert not c.admit("huge", 11, rank=0, now=0.0)
+    c.admit("a", 4, rank=1, now=1.0)
+    c.touch("a", now=2.0)
+    c.touch("missing", now=2.0)
+    d = ReadCache("OLCF", capacity_bytes=10, eviction="lru")
+    d.load_state_dict(c.state_dict())
+    assert d.state_dict() == c.state_dict()
+    assert d.hits == 1 and d.misses == 1 and d.used == 4
+
+
+# ----------------------------------------------------------- replica catalog
+def test_replica_catalog_follows_table_and_adopts():
+    table = TransferTable()
+    cat = ReplicaCatalog(table, "LLNL", ("ALCF", "OLCF"))
+    table.populate(["d1", "d2"], "LLNL", ["ALCF", "OLCF"])
+    assert not cat.materialized("d1") and cat.serving_site("d1") is None
+    table.update("d1", "OLCF", status=Status.SUCCEEDED)
+    assert cat.serving_site("d1") == "OLCF"
+    table.update("d1", "ALCF", status=Status.SUCCEEDED)
+    # replica priority order, not arrival order
+    assert cat.serving_site("d1") == "ALCF"
+    assert cat.holders("d1") == {"ALCF", "OLCF"}
+    assert cat.materialized_count() == 1
+    # a catalog built over an already-populated table adopts its history
+    late = ReplicaCatalog(table, "LLNL", ("ALCF", "OLCF"))
+    assert late.serving_site("d1") == "ALCF"
+    assert late.serving_site("d2") is None
+
+
+# ------------------------------------------------------------ read contention
+def _transport():
+    graph = paper_route_graph()
+    clock = SimClock()
+    return graph, clock, SimulatedTransport(
+        graph, clock, PauseManager(), FaultInjector(seed=0), Notifier(),
+        RetryPolicy())
+
+
+def test_reader_streams_tax_the_site_read_cap():
+    graph, clock, transport = _transport()
+    solo = transport.user_read_rate("LLNL")
+    transport.set_read_load("svc", {"LLNL": 8})
+    shared = transport.user_read_rate("LLNL")
+    assert shared < solo
+    # an empty load withdraws the owner entirely
+    transport.set_read_load("svc", {})
+    assert transport.user_read_rate("LLNL") == solo
+    assert transport._reader_streams() == {}
+
+
+def test_reader_pseudo_route_contends_with_movers():
+    """The fair-share allocator sees reader streams as a pseudo-route on the
+    source's read cap: movers sourcing there slow down, and the pseudo-route
+    never leaks into the real-route rate dict."""
+    graph, clock, transport = _transport()
+    movers = {("LLNL", "ALCF"): 2}
+    base = graph.effective_rate("LLNL", "ALCF", movers)
+    contended = graph.effective_rate(
+        "LLNL", "ALCF", {**movers, ("LLNL", transport._READERS): 8})
+    assert contended < base
+    transport.set_read_load("svc", {"LLNL": 8})
+    assert all(transport._READERS not in r
+               for r in transport._route_rates([]))
+
+
+def test_transport_snapshot_omits_empty_read_load():
+    """Demand-free snapshots must stay byte-identical to the pre-demand
+    format: the read_load key appears only when readers are registered."""
+    _, _, transport = _transport()
+    assert "read_load" not in transport.state_dict()
+    transport.set_read_load("svc", {"LLNL": 3, "ALCF": 1})
+    d = transport.state_dict()
+    assert d["read_load"] == [["svc", "ALCF", 1], ["svc", "LLNL", 3]]
+    _, _, fresh = _transport()
+    fresh.load_state_dict(d, catalog={})
+    assert fresh._reader_streams() == {"LLNL": 3, "ALCF": 1}
+
+
+# -------------------------------------------------- popular-first scheduling
+def _mini_campaign(n=12, seed=3):
+    graph = paper_route_graph()
+    catalog = {d.path: d for d in make_catalog(
+        n, total_bytes=n * GB, total_files=n * 40, total_dirs=n * 4,
+        seed=seed)}
+    clock = SimClock()
+    transport = SimulatedTransport(graph, clock, PauseManager(),
+                                   FaultInjector(seed=seed), Notifier(),
+                                   RetryPolicy())
+    table = TransferTable()
+    sched = ReplicationScheduler(table, transport, catalog,
+                                 ReplicationPolicy("LLNL", ("ALCF",)),
+                                 RetryPolicy(), Notifier())
+    return catalog, clock, table, sched
+
+
+def test_set_priority_starts_popular_datasets_first():
+    catalog, clock, table, sched = _mini_campaign()
+    sched.populate()
+    order = sorted(catalog)
+    rank = {p: len(order) - 1 - i for i, p in enumerate(order)}  # reversed
+    sched.set_priority(lambda ds: rank[ds])
+    sched.step(clock.now)
+    started = {r.dataset for r in table.by_status(Status.ACTIVE,
+                                                  destination="ALCF")}
+    assert started
+    expected = set(sorted(catalog, key=lambda p: rank[p])[:len(started)])
+    assert started == expected              # hottest ranks started first
+
+
+def test_reprioritize_preserves_entry_multiset():
+    catalog, clock, table, sched = _mini_campaign()
+    sched.populate()
+    before = {dst: sorted(e if isinstance(e, str) else e[1] for e in h)
+              for dst, h in sched._direct.items()}
+    sched.set_priority(lambda ds: hash(ds) % 7)
+    sched.reprioritize()
+    after = {dst: sorted(e[1] for e in h)
+             for dst, h in sched._direct.items()}
+    assert before == after
+    sched.set_priority(None)                # clearing restores plain entries
+    assert {dst: sorted(h) for dst, h in sched._direct.items()} == before
+
+
+# ------------------------------------------------------ scenario integration
+def test_no_demand_build_is_bit_identical_to_baseline():
+    """esgf-serving with its traffic stripped replays the paper-2022
+    trajectory exactly — the subsystem is invisible until a scenario opts
+    in."""
+    from repro.core.snapshot import trajectory_summary
+    base = get_scenario("paper-2022")
+    stripped = get_scenario("esgf-serving").with_demand(NO_DEMAND)
+    summaries = []
+    for spec in (base, stripped):
+        world = spec.build(scale=0.01, seed=0, n_datasets=12)
+        assert world.demand is None
+        stats = EngineStats()
+        rep = run_world(world, engine="events", stats=stats)
+        summaries.append(trajectory_summary(rep, stats, world.table))
+    assert summaries[0] == summaries[1]
+
+
+def test_esgf_serving_end_to_end():
+    world = get_scenario("esgf-serving").build(scale=0.01, seed=0,
+                                               n_datasets=12)
+    assert world.demand is not None
+    rep = run_world(world, engine="events")
+    s = world.demand.summary()
+    assert s["waves"] > 0 and s["requests"] > 0
+    assert 0.0 < s["hit_rate"] <= 1.0
+    assert s["hits"] == s["requests"] - s["source_reads"]
+    assert s["p99_s"] >= s["p50_s"] > 0.0
+    assert s["day90"] is not None           # the campaign reaches the SLO
+    assert set(s["caches"]) == {"ALCF", "OLCF"}
+    # the finished campaign withdrew its reader streams from the transport
+    assert world.transport._reader_streams() == {}
+    assert rep.duration_days > 0
+
+
+def test_demand_and_bundling_cannot_combine():
+    spec = get_scenario("small-file-storm").with_demand(users=50_000)
+    with pytest.raises(ValueError, match="bundling"):
+        spec.build(scale=0.01, seed=0, n_datasets=20)
+
+
+def test_scenario_tags():
+    assert "demand" in scenario_tags(get_scenario("esgf-serving"))
+    assert scenario_tags(get_scenario("crash-resume-demand")) == \
+        ["crash-resume", "demand"]
+    assert "demand" not in scenario_tags(get_scenario("paper-2022"))
+
+
+def test_cli_list_shows_demand_tags(capsys):
+    from repro.scenarios.run import main
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    line = next(l for l in out.splitlines() if l.startswith("esgf-serving"))
+    assert "[demand]" in line
+    line = next(l for l in out.splitlines()
+                if l.startswith("crash-resume-demand"))
+    assert "[crash-resume,demand]" in line
+
+
+# ------------------------------------------------------------- crash-resume
+def test_crash_resume_demand_digest_identical(tmp_path):
+    """Kill esgf-serving at ~50% with traffic live; the resumed run's
+    trajectory summary (succeeded-set digest included) must equal the
+    uninterrupted reference's."""
+    res = run_crash_resume(CRASH_RESUME_DEMAND, str(tmp_path),
+                           scale=0.01, seed=0, n_datasets=12)
+    assert res["kills"], "the kill point was never reached"
+    assert res["match"], (res["reference"], res["resumed"])
