@@ -38,6 +38,12 @@ under the ``federation`` key of ``BENCH_scenarios.json``.
 the catalog-order ablation, and the no-traffic comparator, and records the
 serving SLOs plus the popular-first-beats-catalog-order verdict under the
 ``demand`` key of ``BENCH_scenarios.json``.
+
+``--integrity-bench`` replays ``scrub-and-repair`` (both engines), the
+``bit-rot-paper`` no-scrub ablation, and the corruption-free comparator,
+and records the integrity summaries plus the ends-clean / repairs-converge
+/ exposure / repair-tax verdicts under the ``integrity`` key of
+``BENCH_scenarios.json``.
 """
 from __future__ import annotations
 
@@ -350,6 +356,89 @@ def demand_bench(seed: int = 0) -> dict:
     return out
 
 
+# integrity-bench shape: small enough for CI, enough landed petabytes that
+# the accelerated latent-corruption rate draws a handful of corrupt replicas
+INTEGRITY_SHAPE = dict(n_datasets=32, scale=0.02)
+
+
+def integrity_bench(seed: int = 0) -> dict:
+    """The silent-corruption acceptance experiment: replay scrub-and-repair
+    (both engines), the no-scrub bit-rot ablation, and the corruption-free
+    comparator, recording each arm's determinism tuple plus the integrity
+    summary (detections, repairs, exposure replica-days, surviving at-risk
+    bytes).  Carries the headline verdicts:
+
+      * ``ends_clean`` — every scrub arm finishes with zero corrupt
+        replicas (detected > 0, repaired == detected, clean);
+      * ``repairs_converge`` — the scrub arm's final SUCCEEDED replica set
+        is identical (set digest) to the corruption-free run's end state;
+      * ``ablation_survives_corrupt`` — with scrubbing disabled the same
+        draws leave silently corrupt replicas at campaign end;
+      * ``exposure_ok`` — total at-risk exposure stays under 3 scrub
+        intervals per detected replica;
+      * ``repair_tax_ok`` — scrubbing + repairs cost at most 75% extra
+        campaign days over the corruption-free baseline.
+    """
+    from repro.core.scrub import NO_SCRUB
+    from repro.core.snapshot import replica_set_digest, trajectory_summary
+    from repro.scenarios.events import EngineStats, run_world
+    from repro.scenarios.registry import get_scenario
+
+    arms = {
+        "scrub_repair": (get_scenario("scrub-and-repair"),
+                         ("events", "step")),
+        "no_scrub": (get_scenario("bit-rot-paper"), ("events",)),
+        "clean": (get_scenario("scrub-and-repair").with_scrub(NO_SCRUB),
+                  ("events",)),
+    }
+    out = {"seed": seed, "shape": dict(INTEGRITY_SHAPE), "arms": {}}
+    for label, (spec, engines) in arms.items():
+        for engine in engines:
+            world = spec.build(seed=seed, **INTEGRITY_SHAPE)
+            stats = EngineStats()
+            t0 = time.time()
+            rep = run_world(world, engine=engine, stats=stats)
+            wall = time.time() - t0
+            traj = trajectory_summary(rep, stats, world.table)
+            key = label if engine == "events" else f"{label}_{engine}"
+            arm = {
+                "wall_s": round(wall, 3),
+                "iterations": stats.iterations,
+                "sim_days": rep.duration_days,
+                "faults_total": rep.faults_total,
+                "quarantined": rep.quarantined,
+                "succeeded_digest": traj["succeeded_digest"],
+                "replica_digest": replica_set_digest(world.table),
+            }
+            if world.scrub is not None:
+                arm["integrity"] = world.scrub.summary()
+            out["arms"][key] = arm
+            print(f"{key:20} {arm['sim_days']:8.3f} d "
+                  f"({arm['wall_s']:.2f}s)"
+                  + (f"  detected={arm['integrity']['detected']} "
+                     f"repaired={arm['integrity']['repaired']} "
+                     f"exposure={arm['integrity']['exposure_days']}d "
+                     f"{'CLEAN' if arm['integrity']['clean'] else 'AT RISK'}"
+                     if "integrity" in arm else ""))
+    sr = out["arms"]["scrub_repair"]
+    interval = get_scenario("scrub-and-repair").scrub.interval_days
+    out["ends_clean"] = all(
+        a["integrity"]["clean"] and a["integrity"]["detected"] > 0
+        and a["integrity"]["repaired"] == a["integrity"]["detected"]
+        for a in (sr, out["arms"]["scrub_repair_step"]))
+    out["repairs_converge"] = (
+        sr["replica_digest"] == out["arms"]["clean"]["replica_digest"])
+    ab = out["arms"]["no_scrub"]["integrity"]
+    out["ablation_survives_corrupt"] = (
+        not ab["clean"] and ab["data_at_risk_bytes"] > 0)
+    out["exposure_ok"] = (
+        sr["integrity"]["exposure_days"]
+        <= 3.0 * interval * max(1, sr["integrity"]["detected"]))
+    out["repair_tax_ok"] = (
+        sr["sim_days"] <= out["arms"]["clean"]["sim_days"] * 1.75)
+    return out
+
+
 # policy-bench shapes: small enough for CI, large enough that the task-
 # dispatch overhead the control plane amortizes actually dominates static
 POLICY_SHAPES = {
@@ -452,6 +541,10 @@ def main():
                     help="compare popular-first vs catalog-order vs "
                          "no-traffic serving on esgf-serving and record it "
                          "in BENCH_scenarios.json")
+    ap.add_argument("--integrity-bench", action="store_true",
+                    help="compare scrub-and-repair vs the no-scrub bit-rot "
+                         "ablation vs the corruption-free baseline and "
+                         "record it in BENCH_scenarios.json")
     ap.add_argument("--federation-bench", action="store_true",
                     help="benchmark the overlapped two-campaign federation "
                          "vs its serial variant (both engines, source-cap "
@@ -481,6 +574,11 @@ def main():
     if args.demand_bench:
         doc = demand_bench()
         emit_bench([], path=args.bench_out, extra={"demand": doc})
+        print(json.dumps(doc, indent=2))
+        return
+    if args.integrity_bench:
+        doc = integrity_bench()
+        emit_bench([], path=args.bench_out, extra={"integrity": doc})
         print(json.dumps(doc, indent=2))
         return
     if args.federation_bench:

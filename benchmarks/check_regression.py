@@ -67,6 +67,7 @@ def check(baseline: dict, candidate: dict, max_regress: float) -> list:
     fails.extend(check_federation(baseline, candidate, max_regress))
     fails.extend(check_policy(baseline, candidate))
     fails.extend(check_demand(baseline, candidate))
+    fails.extend(check_integrity(baseline, candidate))
     return fails
 
 
@@ -177,6 +178,68 @@ def check_demand(baseline: dict, candidate: dict) -> list:
         fails.append(
             "esgf-serving steady-state hit-rate fell below the 0.9 floor: "
             f"final-day hit-rate {floor}")
+    return fails
+
+
+def check_integrity(baseline: dict, candidate: dict) -> list:
+    """Integrity gate: every integrity-bench arm must reproduce the
+    baseline's determinism tuple exactly — iterations, float-exact simulated
+    days, fault totals, the succeeded-set digest, the replica-set digest,
+    and the full integrity summary (detections, repairs, exposure,
+    surviving at-risk bytes) — and the scenario-level verdicts must hold on
+    the candidate itself: scrub arms end with zero corrupt replicas, the
+    repaired end state is set-identical to the corruption-free run's, the
+    no-scrub ablation still surfaces surviving corruption, exposure stays
+    bounded, and the repair-traffic tax stays under 75% extra campaign
+    days."""
+    fails = []
+    base = baseline.get("integrity")
+    if base is None:
+        return []               # pre-scrub baseline: nothing to gate
+    cand = candidate.get("integrity")
+    if cand is None:
+        return ["candidate is missing the integrity block "
+                "(run benchmarks/campaign_replay.py --integrity-bench)"]
+    if base.get("seed") != cand.get("seed") or \
+            base.get("shape") != cand.get("shape"):
+        return [f"integrity benchmark shapes differ: baseline "
+                f"seed={base.get('seed')}/shape={base.get('shape')} vs "
+                f"candidate seed={cand.get('seed')}/shape={cand.get('shape')}"]
+    for arm, b_arm in base.get("arms", {}).items():
+        c_arm = cand.get("arms", {}).get(arm)
+        if c_arm is None:
+            fails.append(f"integrity arm {arm!r} missing from candidate")
+            continue
+        for key in ("iterations", "sim_days", "faults_total", "quarantined",
+                    "succeeded_digest", "replica_digest"):
+            if b_arm.get(key) != c_arm.get(key):
+                fails.append(
+                    f"integrity determinism drift in {arm}.{key}: baseline "
+                    f"{b_arm.get(key)} vs candidate {c_arm.get(key)}")
+        if b_arm.get("integrity") != c_arm.get("integrity"):
+            fails.append(
+                f"integrity summary drift in {arm}: baseline "
+                f"{b_arm.get('integrity')} vs candidate "
+                f"{c_arm.get('integrity')}")
+    for verdict, msg in (
+            ("ends_clean", "a scrub arm no longer ends corruption-free "
+                           "(zero detected, or surviving corrupt replicas)"),
+            ("repairs_converge", "the scrub arm's final replica set no "
+                                 "longer matches the corruption-free run's"),
+            ("ablation_survives_corrupt",
+             "the no-scrub ablation no longer surfaces surviving "
+             "corruption — the injector may have stopped drawing"),
+            ("exposure_ok", "at-risk exposure exceeded 3 scrub intervals "
+                            "per detected replica"),
+            ("repair_tax_ok", "scrub + repair cost more than 75% extra "
+                              "campaign days over the corruption-free "
+                              "baseline")):
+        if not cand.get(verdict):
+            sr = cand.get("arms", {}).get("scrub_repair", {})
+            fails.append(
+                f"integrity verdict {verdict} failed: {msg} "
+                f"(scrub_repair sim_days="
+                f"{sr.get('sim_days')}, integrity={sr.get('integrity')})")
     return fails
 
 

@@ -120,6 +120,8 @@ def render_federation_text(world, now: float) -> str:
             lines.append(render_policy_text(rt.control, now))
         if rt.demand is not None:
             lines.append(render_demand_text(rt.demand, now))
+        if rt.scrub is not None:
+            lines.append(render_scrub_text(rt.scrub, now))
     return "\n".join(lines)
 
 
@@ -214,6 +216,45 @@ def render_demand_text(demand, now: float) -> str:
                 f"cache {r['site']:6} {r['entries']} entries "
                 f"{_fmt_bytes(r['used_bytes'])} hits={r['hits']:,} "
                 f"misses={r['misses']:,} evictions={r['evictions']:,}")
+    return "\n".join(lines)
+
+
+# -------------------------------------------------------- scrub-engine view
+def scrub_rows(scrub) -> List[Dict]:
+    """The scrub engine's integrity state as dashboard rows: one headline
+    row — scan progress, detections/repairs, and the data currently at
+    risk (landed but carrying undetected or unrepaired corruption)."""
+    s = scrub.summary()
+    return [{
+        "campaign": scrub.label,
+        "kind": "integrity",
+        "scans": s["scans"],
+        "scanned_replicas": s["scanned_replicas"],
+        "scanned_bytes": s["scanned_bytes"],
+        "detected": s["detected"],
+        "repaired": s["repaired"],
+        "at_risk_replicas": s["at_risk_replicas"],
+        "repairing_replicas": s["repairing_replicas"],
+        "data_at_risk_bytes": s["data_at_risk_bytes"],
+        "corrupt_files": s["corrupt_files"],
+        "corrupt_bytes": s["corrupt_bytes"],
+        "exposure_days": s["exposure_days"],
+        "clean": s["clean"],
+    }]
+
+
+def render_scrub_text(scrub, now: float) -> str:
+    """The integrity view as text: one scrub/repair status line."""
+    lines = [f"--- integrity [{scrub.label}] @ t={now/86400:.2f} d ---"]
+    for r in scrub_rows(scrub):
+        state = "CLEAN" if r["clean"] else (
+            f"AT RISK {_fmt_bytes(r['data_at_risk_bytes'])} "
+            f"({r['at_risk_replicas']} undetected, "
+            f"{r['repairing_replicas']} repairing)")
+        lines.append(
+            f"scans={r['scans']} scanned={_fmt_bytes(r['scanned_bytes'])} "
+            f"detected={r['detected']} repaired={r['repaired']} "
+            f"exposure={r['exposure_days']:.2f} replica-days {state}")
     return "\n".join(lines)
 
 

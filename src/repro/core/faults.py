@@ -16,6 +16,18 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.kernels.checksum.ref import checksum_bytes_np
+
+_PB = 1024 ** 5
+
+
+def stable_digest(text: str) -> int:
+    """Process-independent 32-bit digest of a string, via the checksum
+    kernel.  Python's ``hash()`` is randomized per process (PYTHONHASHSEED),
+    so anything derived from it silently differs between the sweep runner's
+    workers and the main process; this is the seedable replacement."""
+    return int(checksum_bytes_np(text.encode("utf-8")))
+
 
 class FaultKind(str, enum.Enum):
     NETWORK = "network"            # packet corruption, connection reset
@@ -49,6 +61,7 @@ class FaultInjector:
                  transient_per_tb: float = 0.15,
                  fragility_tail: float = 2.5,
                  persistent_fraction: float = 0.01):
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.transient_per_tb = transient_per_tb
         self.fragility_tail = fragility_tail
@@ -73,9 +86,35 @@ class FaultInjector:
         return int(self.rng.poisson(lam))
 
     def is_persistent_unreadable(self, dataset: str) -> bool:
-        # deterministic per dataset
-        h = abs(hash(("perm", dataset))) % 10_000
+        # deterministic per (seed, dataset) — and, unlike Python's hash(),
+        # identical across processes regardless of PYTHONHASHSEED
+        h = stable_digest(f"perm|{self.seed}|{dataset}") % 10_000
         return h < int(self.persistent_fraction * 10_000)
+
+    # --------------------------------------------------------- latent corruption
+    def latent_corrupt_offsets(self, dataset: str, destination: str,
+                               nbytes: int, rate_per_pb: float,
+                               incarnation: int = 1) -> np.ndarray:
+        """Silent-corruption draw for one landed replica: sorted byte offsets
+        of blocks that arrived intact (the in-flight INTEGRITY retransmit
+        already caught transfer corruption) but rot on the destination media
+        and are detectable only by a later re-verification scan.
+
+        Pure function of ``(seed, dataset, destination, incarnation)`` —
+        independent of ``self.rng``, so evaluating it lazily at scrub time
+        perturbs neither the shared transient-fault stream nor any existing
+        trajectory.  ``incarnation`` counts SUCCEEDED landings of this
+        replica: a repaired (re-transferred) copy is a fresh draw, which is
+        what lets a scrub/repair campaign converge to zero corrupt bytes.
+        """
+        rng = np.random.default_rng(
+            [self.seed, stable_digest(dataset), stable_digest(destination),
+             int(incarnation)])
+        n = int(rng.poisson(rate_per_pb * nbytes / _PB))
+        if n == 0:
+            return np.empty(0, dtype=np.int64)
+        offs = rng.uniform(0.0, float(nbytes), n).astype(np.int64)
+        return np.unique(offs)
 
     # ------------------------------------------------------------ checkpoints
     def state_dict(self) -> dict:

@@ -17,7 +17,7 @@ from __future__ import annotations
 import json
 import os
 from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
@@ -91,20 +91,39 @@ class Manifest:
                 m.entries[rel] = stream_file_checksum(p)
         return m
 
-    def verify(self, root: str) -> Dict[str, str]:
-        """Returns {relpath: problem} for every mismatch; empty dict == clean."""
-        problems: Dict[str, str] = {}
-        for rel, (size, csum) in self.entries.items():
+    def verify_many(self, root: str,
+                    rels: Optional[Iterable[str]] = None) -> Dict[str, dict]:
+        """Batched (partial-scrub) verification: check ``rels`` — any subset
+        of the manifest's entries, default all — and report BOTH the size and
+        checksum status of every file checked, even when the size already
+        mismatches.  Returns ``{relpath: {"ok", "size_ok", "checksum_ok",
+        "problem"}}``; scrub engines call this with one batch of files per
+        pass instead of walking the whole manifest serially."""
+        report: Dict[str, dict] = {}
+        for rel in (self.entries if rels is None else rels):
+            size, csum = self.entries[rel]
             p = os.path.join(root, rel)
             if not os.path.exists(p):
-                problems[rel] = "missing"
+                report[rel] = {"ok": False, "size_ok": False,
+                               "checksum_ok": False, "problem": "missing"}
                 continue
             got_size, got_csum = stream_file_checksum(p)
-            if got_size != size:
-                problems[rel] = f"size {got_size} != {size}"
-            elif got_csum != csum:
-                problems[rel] = "checksum mismatch"
-        return problems
+            size_ok = got_size == size
+            csum_ok = got_csum == csum
+            problems = []
+            if not size_ok:
+                problems.append(f"size {got_size} != {size}")
+            if not csum_ok:
+                problems.append("checksum mismatch")
+            report[rel] = {"ok": size_ok and csum_ok, "size_ok": size_ok,
+                           "checksum_ok": csum_ok,
+                           "problem": "; ".join(problems)}
+        return report
+
+    def verify(self, root: str) -> Dict[str, str]:
+        """Returns {relpath: problem} for every mismatch; empty dict == clean."""
+        return {rel: r["problem"]
+                for rel, r in self.verify_many(root).items() if not r["ok"]}
 
     # ------------------------------------------------------------- persistence
     def save(self, path: str) -> None:

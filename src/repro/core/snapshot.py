@@ -45,8 +45,11 @@ from repro.core.transfer_table import Status, TransferTable
 # transport's per-route telemetry counters + per-task setup cursor
 # v3: adds the demand block (request-workload RNG + popularity order, read
 # caches, wave cursors, serving counters) and the transport's user read load
-SNAPSHOT_VERSION = 3
-FEDERATION_SNAPSHOT_VERSION = 3
+# v4: adds the scrub block (scan anchor/cursor, per-replica integrity ledger
+# with incarnation counts, data-at-risk counters), so a kill mid-scrub
+# resumes the scrub/repair campaign digest-identically
+SNAPSHOT_VERSION = 4
+FEDERATION_SNAPSHOT_VERSION = 4
 FEDERATION_KIND = "federation"
 SNAPSHOT_PREFIX = "snapshot-"
 TABLE_PREFIX = "table-"
@@ -122,6 +125,7 @@ class CampaignSnapshot:
     admitted_top_ups: List[str]
     control: Optional[dict]       # ControlPlane.state_dict(); None = static
     demand: Optional[dict]        # DemandEngine.state_dict(); None = no users
+    scrub: Optional[dict]         # ScrubEngine.state_dict(); None = no rot
     # True when the run forced the static per-dataset baseline (CLI
     # --policy static): resume must re-apply the override instead of
     # rebuilding the registry scenario's declared (possibly adaptive) policy
@@ -217,7 +221,7 @@ class FederationSnapshot:
                          "scheduler", "notifier", "fix_at", "next_snap_day",
                          "timeline", "pending_top_ups", "feed_cursor",
                          "incremental_last_check", "admitted_top_ups",
-                         "control", "demand"}
+                         "control", "demand", "scrub"}
         for r in kw["runtimes"]:
             if set(r) != _RUNTIME_KEYS:
                 raise SnapshotError(
@@ -272,6 +276,8 @@ def capture_snapshot(world, loop: LoopState, engine: str,
                  if world.control is not None else None),
         demand=(world.demand.state_dict()
                 if world.demand is not None else None),
+        scrub=(world.scrub.state_dict()
+               if world.scrub is not None else None),
         policy_static=not world.spec.policy.enabled,
     )
 
@@ -317,6 +323,14 @@ def apply_snapshot(world, snap: CampaignSnapshot) -> LoopState:
         # killed run's priorities verbatim, and the replica catalog was
         # rebuilt by table-listener adoption at build time
         world.demand.load_state_dict(snap.demand)
+    if (snap.scrub is None) != (world.scrub is None):
+        raise SnapshotError(
+            "snapshot and world disagree about the scrub engine — the "
+            "scenario's scrub spec changed since the snapshot was written")
+    if world.scrub is not None:
+        # replaces the constructor's table-adoption ledger with the killed
+        # run's exact incarnation counts, at-risk/repairing sets, and cursor
+        world.scrub.load_state_dict(snap.scrub)
     return LoopState(
         iterations=snap.iterations,
         fix_at=dict(snap.fix_at),
@@ -352,6 +366,8 @@ def _capture_runtime(rt, ls: LoopState, table_file: str) -> dict:
                     if rt.control is not None else None),
         "demand": (rt.demand.state_dict()
                    if rt.demand is not None else None),
+        "scrub": (rt.scrub.state_dict()
+                  if rt.scrub is not None else None),
     }
 
 
@@ -418,6 +434,12 @@ def _apply_runtime(rt, block: dict) -> LoopState:
     rt.sched.load_state_dict(block["scheduler"])
     if rt.demand is not None:
         rt.demand.load_state_dict(block["demand"])
+    if (block["scrub"] is None) != (rt.scrub is None):
+        raise SnapshotError(
+            f"member {rt.label!r}: snapshot and world disagree about the "
+            "scrub engine — the member's scrub spec changed")
+    if rt.scrub is not None:
+        rt.scrub.load_state_dict(block["scrub"])
     return LoopState(
         iterations=0,
         fix_at=dict(block["fix_at"]),
@@ -641,6 +663,20 @@ def succeeded_digest(table: TransferTable) -> str:
         h.update((f"{rec.dataset}|{rec.destination}|{rec.source}|"
                   f"{rec.faults}|{rec.retries}|{rec.bytes_transferred}|"
                   f"{rec.rate!r}\n").encode())
+    return h.hexdigest()
+
+
+def replica_set_digest(table: TransferTable) -> str:
+    """Order-independent digest of WHICH replicas exist: every SUCCEEDED
+    (dataset, destination) pair, nothing else.  Scrub repairs re-transfer
+    replicas — changing retries, rates, and possibly the final source — so
+    the scrub acceptance invariant ("a completed scrub/repair campaign ends
+    in the corruption-free run's end state") compares this digest, not
+    ``succeeded_digest``."""
+    h = hashlib.sha256()
+    for rec in table.all():                       # sorted by (dataset, dest)
+        if rec.status is Status.SUCCEEDED:
+            h.update(f"{rec.dataset}|{rec.destination}\n".encode())
     return h.hexdigest()
 
 

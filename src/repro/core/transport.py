@@ -678,3 +678,15 @@ class LocalFSTransport(Transport):
 
     def poll(self, uid: str) -> TransferState:
         return self._states[uid]
+
+    def audit(self, dataset: Dataset, source: str, destination: str,
+              rels=None) -> Dict[str, dict]:
+        """Post-landing scrub of a landed replica: scan the source tree into
+        a ``Manifest`` and re-verify the destination copy against it with
+        ``Manifest.verify_many`` — the same batched/partial API the simulated
+        scrub engine models.  ``rels`` limits the audit to a subset of files
+        (one scrub batch); returns the per-file verify_many report."""
+        from repro.core.integrity import Manifest
+        src = os.path.join(self.site_dir(source), dataset.path.lstrip("/"))
+        dst = os.path.join(self.site_dir(destination), dataset.path.lstrip("/"))
+        return Manifest.scan(src).verify_many(dst, rels=rels)

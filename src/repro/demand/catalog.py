@@ -35,6 +35,16 @@ class ReplicaCatalog:
                 old_source: Optional[str]) -> None:
         if rec.status == Status.SUCCEEDED:
             self._holders.setdefault(rec.dataset, set()).add(rec.destination)
+        elif old_status == Status.SUCCEEDED:
+            # a replica leaving SUCCEEDED (scrub found it corrupt and flipped
+            # it back into the repair path) is unserveable until re-landed:
+            # reads fall back to other holders or the source, so the hit rate
+            # dips during repair and recovers when the re-transfer lands
+            held = self._holders.get(rec.dataset)
+            if held is not None:
+                held.discard(rec.destination)
+                if not held:
+                    del self._holders[rec.dataset]
 
     # -------------------------------------------------------------- queries
     def materialized(self, dataset: str) -> bool:

@@ -162,9 +162,17 @@ CRASH_RESUME_DEMAND = CrashResumeSpec(
                 "trajectory.",
     base="esgf-serving", kill_fracs=(0.5,))
 
+CRASH_RESUME_SCRUB = CrashResumeSpec(
+    name="crash-resume-scrub",
+    description="Kill the scrub-and-repair campaign at ~50%, mid-scrub: the "
+                "scrub anchor and cursor, at-risk/repairing ledgers, "
+                "incarnation counters, and exposure accounting must all "
+                "resume to a digest-identical corruption-free end state.",
+    base="scrub-and-repair", kill_fracs=(0.5,))
+
 CRASH_RESUME_SCENARIOS: Dict[str, CrashResumeSpec] = {
     s.name: s for s in (CRASH_RESUME_PAPER, CRASH_RESUME_STORM,
                         CRASH_RESUME_TOPUP, CRASH_RESUME_STEP,
                         CRASH_RESUME_FEDERATION, CRASH_RESUME_POLICY,
-                        CRASH_RESUME_DEMAND)
+                        CRASH_RESUME_DEMAND, CRASH_RESUME_SCRUB)
 }

@@ -71,6 +71,8 @@ def _next_event_dt(shared, runtimes, members, finished_at,
             cand.append(rt.control.next_action(now) - now)
         if rt.demand is not None:
             cand.append(rt.demand.next_wave(now) - now)
+        if rt.scrub is not None:
+            cand.append(rt.scrub.next_action(now) - now)
         for t in members[i].fix_at.values():
             if t > now:
                 cand.append(t - now)
@@ -206,6 +208,11 @@ def run_world(world, engine: str = "events",
                 runtimes[i].demand.step(clock.now)
             if runtimes[i].control is not None:
                 runtimes[i].control.step(clock.now)
+            # scrub after the control plane, before the scheduler: a due
+            # scan's repair flips land as FAILED rows this same pass, so the
+            # scheduler step dispatches re-transfers alongside live work
+            if runtimes[i].scrub is not None:
+                runtimes[i].scrub.step(clock.now)
             runtimes[i].sched.step(clock.now)
         for i in active:
             rt, ls = runtimes[i], members[i]
@@ -228,7 +235,8 @@ def run_world(world, engine: str = "events",
                         if d.path not in rt.catalog)
                     ls.feed_cursor = feed.count()
             if (rt.sched.done() and not ls.pending_top_ups
-                    and (rt.control is None or rt.control.exhausted())):
+                    and (rt.control is None or rt.control.exhausted())
+                    and (rt.scrub is None or rt.scrub.exhausted())):
                 _finish(i)
                 just_done.append(i)
         done = all(f is not None for f in finished_at)

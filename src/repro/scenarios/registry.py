@@ -14,6 +14,7 @@ from typing import Dict, List
 
 from repro.control.policy import TransferPolicySpec
 from repro.core.routes import GB, TB
+from repro.core.scrub import ScrubSpec
 from repro.scenarios.crash_resume import (CRASH_RESUME_SCENARIOS,
                                           CrashResumeSpec)
 from repro.demand.spec import DemandSpec
@@ -296,6 +297,43 @@ CACHE_PRESSURE = PAPER_2022.vary(
         prioritize=True))
 
 
+# --------------------------------------------------------- integrity scenarios
+# Silent corruption: a small fraction of landed bytes are bad on arrival
+# (undetected by the in-flight INTEGRITY faults, which fire and retry during
+# the transfer).  The scrub engine periodically re-verifies landed replicas
+# in size-bounded passes and routes detected replicas back through the
+# ordinary retry/relay machinery as repairs.  The rate is accelerated
+# (~25 bad replicas/PB landed, vs real-world fractions of one) so that
+# reduced-shape CI replays still draw a handful of corruptions.
+_SCRUB = ScrubSpec(latent_per_pb=25.0, interval_days=5.0,
+                   scan_tb_per_pass=2000.0)
+
+SCRUB_AND_REPAIR = PAPER_2022.vary(
+    name="scrub-and-repair",
+    description="paper-2022 with accelerated latent corruption (~25 bad "
+                "replicas/PB landed) and a 5-day scrub cadence at 2 PB/pass: "
+                "detected replicas are re-transferred through the normal "
+                "retry path, contending with live replication, until the "
+                "campaign ends corruption-free.",
+    scrub=_SCRUB)
+
+BIT_ROT_PAPER = PAPER_2022.vary(
+    name="bit-rot-paper",
+    description="The no-scrub ablation: identical latent-corruption draws "
+                "but no re-verification ever runs — the campaign 'succeeds' "
+                "while silently corrupt replicas survive to the end, "
+                "measurable in the integrity summary.",
+    scrub=dataclasses.replace(_SCRUB, interval_days=0.0))
+
+CORRUPT_UNDER_DEMAND = ESGF_SERVING.vary(
+    name="corrupt-under-demand",
+    description="esgf-serving with latent corruption and scrubbing: "
+                "detected replicas drop out of the serveable set (hit rate "
+                "dips), repairs contend with user traffic for the read "
+                "caps, and the serveable set recovers as repairs land.",
+    scrub=_SCRUB)
+
+
 # ------------------------------------------------------ federation scenarios
 # The paper's actual regime: the 29M-file catalog was moved TWICE — to ANL
 # and to ORNL — as two overlapping campaigns contending for the same
@@ -371,7 +409,8 @@ _REGISTRY: Dict[str, ScenarioSpec] = {
         FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY, MEGA_CAMPAIGN,
         PAPER_TO_ALCF, PAPER_TO_OLCF,
         SMALL_FILE_STORM, MIXED_BUNDLE_PAPER, LOSSY_ROUTE_TUNING,
-        ESGF_SERVING, POPULAR_FIRST_VS_CATALOG_ORDER, CACHE_PRESSURE)
+        ESGF_SERVING, POPULAR_FIRST_VS_CATALOG_ORDER, CACHE_PRESSURE,
+        SCRUB_AND_REPAIR, BIT_ROT_PAPER, CORRUPT_UNDER_DEMAND)
 }
 
 _FEDERATION_REGISTRY: Dict[str, FederationSpec] = {
@@ -413,11 +452,15 @@ def scenario_tags(spec) -> List[str]:
             tags.append("policy")
         if any(m.scenario.demand.enabled for m in spec.members):
             tags.append("demand")
+        if any(m.scenario.scrub.enabled for m in spec.members):
+            tags.append("scrub")
         return tags
     if getattr(spec, "policy", None) is not None and spec.policy.enabled:
         tags.append("policy")
     if getattr(spec, "demand", None) is not None and spec.demand.enabled:
         tags.append("demand")
+    if getattr(spec, "scrub", None) is not None and spec.scrub.enabled:
+        tags.append("scrub")
     if getattr(spec, "top_ups", ()):
         tags.append("top-ups")
     return tags

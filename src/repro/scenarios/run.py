@@ -235,11 +235,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                   if rt.demand is not None}
         if demand:
             out["demand"] = demand
+        scrub = {rt.label: rt.scrub.summary() for rt in world.runtimes
+                 if rt.scrub is not None}
+        if scrub:
+            out["scrub"] = scrub
     else:
         out = report_to_dict(rep, stats, time.time() - t0)
         out["trajectory"] = trajectory_summary(rep, stats, world.table)
         if world.demand is not None:
             out["demand"] = world.demand.summary()
+        if world.scrub is not None:
+            out["scrub"] = world.scrub.summary()
     out["scenario"] = spec.name
     out["engine"] = engine
     if resumed_from is not None:

@@ -29,6 +29,7 @@ from repro.core.faults import (FaultInjector, FederationNotifier, Notifier,
 from repro.core.incremental import IncrementalReplicator, PublishFeed
 from repro.core.pause import DAY, PauseManager
 from repro.core.routes import GB, PB, Dataset, Route, RouteGraph, Site
+from repro.core.scrub import NO_SCRUB, ScrubEngine, ScrubSpec
 from repro.core.transport import SimClock, SimulatedTransport
 from repro.demand.engine import DemandEngine
 from repro.demand.spec import NO_DEMAND, DemandSpec
@@ -131,6 +132,9 @@ class CampaignRuntime:
     # the campaign's demand engine (user traffic + replica serving); None
     # for the default replication-only campaign
     demand: Optional[DemandEngine] = None
+    # the campaign's scrub engine (silent corruption + re-verification +
+    # repair); None for the default corruption-free campaign
+    scrub: Optional[ScrubEngine] = None
 
     @property
     def start_s(self) -> float:
@@ -187,6 +191,10 @@ class ScenarioWorld:
     def demand(self) -> Optional[DemandEngine]:
         return self.runtime.demand if self.runtime is not None else None
 
+    @property
+    def scrub(self) -> Optional[ScrubEngine]:
+        return self.runtime.scrub if self.runtime is not None else None
+
 
 @dataclass(frozen=True)
 class ScenarioSpec:
@@ -216,6 +224,10 @@ class ScenarioSpec:
     # The default (zero users) compiles to NO demand engine and replays the
     # replication-only trajectory bit-identically.
     demand: DemandSpec = NO_DEMAND
+    # silent corruption + scrub/repair campaigns.  The default (zero latent
+    # corruption) compiles to NO scrub engine and replays the corruption-free
+    # trajectory bit-identically.
+    scrub: ScrubSpec = NO_SCRUB
 
     # ------------------------------------------------------------- compilers
     def to_campaign_config(self, scale: float = 1.0, seed: int = 0,
@@ -328,6 +340,22 @@ class ScenarioSpec:
                             self.source, self.replicas, seed=seed,
                             label=label)
 
+    def _build_scrub(self, catalog: Dict[str, Dataset], table, injector,
+                     label: str) -> Optional[ScrubEngine]:
+        """The spec's scrub engine over the built campaign (None when latent
+        corruption is off).  Corruption draws key off raw dataset paths, so
+        scrub cannot be combined with bundling policies (bundle rows would
+        never map back to the per-dataset integrity ledger)."""
+        if not self.scrub.enabled:
+            return None
+        if self.policy.enabled and self.policy.bundling != "dataset":
+            raise ValueError(
+                f"scenario {self.name!r}: scrub campaigns and bundling "
+                "policies cannot be combined (the integrity ledger tracks "
+                "per-dataset replicas, bundles materialize composite paths)")
+        return ScrubEngine(self.scrub, catalog, table, injector,
+                           self.source, self.replicas, label=label)
+
     def build(self, scale: float = 1.0, seed: int = 0,
               n_datasets: Optional[int] = None, table=None) -> ScenarioWorld:
         """Compile the spec onto the campaign wiring, ready to run under
@@ -335,6 +363,7 @@ class ScenarioSpec:
         a restored ``TransferTable`` when resuming from a checkpoint."""
         self.policy.validate()
         self.demand.validate()
+        self.scrub.validate()
         cfg = self.to_campaign_config(scale=scale, seed=seed,
                                       n_datasets=n_datasets)
         injector = FaultInjector(seed=seed,
@@ -357,9 +386,10 @@ class ScenarioSpec:
                                    composer=composer, label=self.name)
         demand = self._build_demand(catalog, table, sched, transport,
                                     seed, label=self.name)
+        scrub = self._build_scrub(catalog, table, injector, label=self.name)
         runtime = CampaignRuntime(self, cfg, catalog, table, sched, notifier,
                                   label=self.name, control=control,
-                                  demand=demand)
+                                  demand=demand, scrub=scrub)
         self._attach_top_ups(runtime, scale)
         shared = SharedWorld(graph, clock, pause, transport)
         return ScenarioWorld(self, cfg, graph, catalog, clock, pause,
@@ -401,6 +431,16 @@ class ScenarioSpec:
         if changes:
             base = dataclasses.replace(base, **changes)
         return dataclasses.replace(self, demand=base)
+
+    def with_scrub(self, scrub: Optional[ScrubSpec] = None,
+                   **changes) -> "ScenarioSpec":
+        """A copy with a different scrub (silent-corruption) spec: pass a
+        whole ``ScrubSpec`` or field overrides on the current one.
+        ``with_scrub(NO_SCRUB)`` is the corruption-free baseline."""
+        base = scrub if scrub is not None else self.scrub
+        if changes:
+            base = dataclasses.replace(base, **changes)
+        return dataclasses.replace(self, scrub=base)
 
 
 # ================================================================ federation
@@ -614,6 +654,7 @@ class FederationSpec:
                 spec = spec.with_policy(self.policy)
             spec.policy.validate()
             spec.demand.validate()
+            spec.scrub.validate()
             cfg = spec.to_campaign_config(scale=scale, seed=seed,
                                           n_datasets=n_datasets)
             notifier = Notifier()
@@ -647,9 +688,11 @@ class FederationSpec:
                         "same data")
             demand = spec._build_demand(catalog, table, sched, transport,
                                         seed, label=labels[i])
+            scrub = spec._build_scrub(catalog, table, injector,
+                                      label=labels[i])
             rt = CampaignRuntime(spec, cfg, catalog, table, sched, notifier,
                                  label=labels[i], start_day=m.start_day,
-                                 control=control, demand=demand)
+                                 control=control, demand=demand, scrub=scrub)
             # route transport notifications (scan OOM, permission halts) by
             # everything this member may have in flight — bundles included.
             # ChainMap is a LIVE view: bundles cut mid-campaign route too.

@@ -178,3 +178,29 @@ def test_sharded_dataset_exact_resume(tmp_path_factory, seed, cut):
     for i in range(cut + 1, cut + 4):
         b, _ = next(it2)
         np.testing.assert_array_equal(b["tokens"], ref[i])
+
+
+# ----------------------------------------------------- streaming checksum
+@given(st.binary(min_size=0, max_size=2048),
+       st.lists(st.integers(0, 3), min_size=0, max_size=64),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_streaming_checksum_any_chunking(data, small_chunks, seed):
+    """StreamingChecksum folded over ANY split of the buffer — including
+    <=3-byte chunks (smaller than one 4-byte word) and zero-length updates —
+    is bit-identical to hashing the whole buffer at once.  This is the
+    contract scrub re-verification and the LocalFS transport both lean on."""
+    from repro.core.integrity import StreamingChecksum
+    s = StreamingChecksum()
+    i = 0
+    # lead with the adversarial tiny chunks, then random-sized remainder
+    for step in small_chunks:
+        s.update(data[i:i + step])
+        i += step
+    rng = np.random.default_rng(seed)
+    while i < len(data):
+        step = int(rng.integers(0, 64))
+        s.update(data[i:i + step])
+        i += step
+    s.update(b"")
+    assert s.digest() == checksum_bytes_np(data)

@@ -1,0 +1,284 @@
+"""Silent-corruption / scrub-repair tests: seeded latent draws (subprocess
+determinism included), detection -> ordinary-retry repair -> convergence to
+the corruption-free end state, the bit-rot ablation, serveability dips in
+the replica catalog, mid-scrub kill/resume, and the batched
+``Manifest.verify_many`` / ``LocalFSTransport.audit`` integrity API."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultInjector, stable_digest
+from repro.core.integrity import Manifest
+from repro.core.routes import Dataset
+from repro.core.scrub import NO_SCRUB, ScrubSpec
+from repro.core.snapshot import replica_set_digest
+from repro.core.transfer_table import Status
+from repro.core.transport import LocalFSTransport
+from repro.scenarios.events import EngineStats, run_world
+from repro.scenarios.registry import get_scenario, scenario_tags
+
+SHAPE = dict(n_datasets=16, scale=0.02)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(spec, engine="events", seed=0):
+    world = spec.build(seed=seed, **SHAPE)
+    stats = EngineStats()
+    rep = run_world(world, engine=engine, stats=stats)
+    return world, rep, stats
+
+
+# ---------------------------------------------------------- seeded injection
+def test_stable_digest_is_checksum_based():
+    # a pure function of the text: no PYTHONHASHSEED, no process identity
+    assert stable_digest("v1.0/abc") == stable_digest("v1.0/abc")
+    assert stable_digest("v1.0/abc") != stable_digest("v1.0/abd")
+
+
+def test_persistent_unreadable_and_latent_draws_cross_process():
+    """The fraction-based unreadable draw and the latent-corruption offsets
+    must be identical in a subprocess with a different hash seed — the old
+    ``hash()``-based draw was per-process-randomized."""
+    inj = FaultInjector(seed=7)
+    names = [f"ds{i:04d}" for i in range(64)]
+    unread = [n for n in names if inj.is_persistent_unreadable(n)]
+    offs = inj.latent_corrupt_offsets("ds0001", "ALCF", 10 * 1024 ** 4,
+                                      rate_per_pb=2000.0, incarnation=3)
+    prog = (
+        "from repro.core.faults import FaultInjector\n"
+        "inj = FaultInjector(seed=7)\n"
+        "names = [f'ds{i:04d}' for i in range(64)]\n"
+        "print([n for n in names if inj.is_persistent_unreadable(n)])\n"
+        "print([int(o) for o in inj.latent_corrupt_offsets('ds0001',\n"
+        "      'ALCF', 10 * 1024 ** 4, rate_per_pb=2000.0, incarnation=3)])\n")
+    env = dict(os.environ, PYTHONPATH=SRC, PYTHONHASHSEED="12345")
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, check=True)
+    got_unread, got_offs = out.stdout.strip().splitlines()
+    assert got_unread == repr(unread)
+    assert got_offs == repr([int(o) for o in offs])
+
+
+def test_latent_draws_keyed_by_replica_and_incarnation():
+    inj = FaultInjector(seed=0)
+    a = inj.latent_corrupt_offsets("ds", "ALCF", 1024 ** 5, 50.0)
+    b = inj.latent_corrupt_offsets("ds", "ALCF", 1024 ** 5, 50.0)
+    np.testing.assert_array_equal(a, b)     # pure function of the key
+    c = inj.latent_corrupt_offsets("ds", "OLCF", 1024 ** 5, 50.0)
+    d = inj.latent_corrupt_offsets("ds", "ALCF", 1024 ** 5, 50.0,
+                                   incarnation=2)
+    assert list(a) != list(c) or list(a) != list(d)
+    assert len(inj.latent_corrupt_offsets("ds", "ALCF", 1024 ** 5, 0.0)) == 0
+    assert (a < 1024 ** 5).all() and (a >= 0).all()
+
+
+def test_scrub_spec_validation_and_tags():
+    with pytest.raises(ValueError):
+        ScrubSpec(latent_per_pb=-1.0).validate()
+    with pytest.raises(ValueError):
+        ScrubSpec(latent_per_pb=1.0, interval_days=-1.0).validate()
+    NO_SCRUB.validate()
+    assert not NO_SCRUB.enabled
+    assert ScrubSpec(latent_per_pb=1.0, interval_days=0.0).enabled
+    assert not ScrubSpec(latent_per_pb=1.0, interval_days=0.0).scrubbing
+    assert "scrub" in scenario_tags(get_scenario("scrub-and-repair"))
+    assert "scrub" not in scenario_tags(get_scenario("paper-2022"))
+
+
+def test_scrub_rejects_bundling_policies():
+    from repro.control.policy import TransferPolicySpec
+    spec = get_scenario("scrub-and-repair").vary(
+        policy=TransferPolicySpec(bundling="greedy"))
+    with pytest.raises(ValueError):
+        spec.build(seed=0, **SHAPE)
+
+
+# ------------------------------------------------- campaign-level properties
+def test_scrub_campaign_ends_clean_and_converges():
+    """The acceptance property: a completed scrub-and-repair campaign has
+    detected and repaired every latent corruption, and its final SUCCEEDED
+    replica set is identical to a corruption-free run's end state."""
+    world, _, _ = _run(get_scenario("scrub-and-repair"))
+    s = world.scrub.summary()
+    assert s["detected"] > 0, "shape drew no corruption: weaken the test"
+    assert s["repaired"] == s["detected"]
+    assert s["clean"] and s["at_risk_replicas"] == 0
+    assert s["data_at_risk_bytes"] == 0
+    assert s["exposure_days"] > 0
+    assert s["corrupt_files"] > 0 and s["corrupt_bytes"] > 0
+
+    clean_world, _, _ = _run(
+        get_scenario("scrub-and-repair").with_scrub(NO_SCRUB))
+    assert clean_world.scrub is None
+    assert replica_set_digest(world.table) == \
+        replica_set_digest(clean_world.table)
+
+
+def test_scrub_deterministic_across_engines_and_runs():
+    w1, r1, s1 = _run(get_scenario("scrub-and-repair"))
+    w2, r2, s2 = _run(get_scenario("scrub-and-repair"))
+    assert s1.iterations == s2.iterations
+    assert r1.duration_days == r2.duration_days
+    assert w1.scrub.summary() == w2.scrub.summary()
+    w3, _, _ = _run(get_scenario("scrub-and-repair"), engine="step")
+    step_s = w3.scrub.summary()
+    assert step_s["clean"]
+    assert replica_set_digest(w3.table) == replica_set_digest(w1.table)
+
+
+def test_bit_rot_ablation_preserves_trajectory_and_surfaces_risk():
+    """With scrubbing disabled the same draws must (a) leave the campaign
+    trajectory byte-identical to a corruption-free run — draws are pure
+    functions, never consuming shared RNG — and (b) survive to the end as
+    measurable at-risk data."""
+    rot, rep_rot, st_rot = _run(get_scenario("bit-rot-paper"))
+    clean, rep_clean, st_clean = _run(get_scenario("paper-2022"))
+    assert st_rot.iterations == st_clean.iterations
+    assert rep_rot.duration_days == rep_clean.duration_days
+    assert rep_rot.faults_total == rep_clean.faults_total
+    s = rot.scrub.summary()
+    assert not s["clean"]
+    assert s["at_risk_replicas"] > 0 and s["data_at_risk_bytes"] > 0
+    assert s["scans"] == 0 and s["detected"] == 0
+
+
+def test_repairs_drop_replica_from_serving_until_relanded():
+    """ReplicaCatalog marks a scrub-flipped replica unserveable: holders
+    lose the destination on SUCCEEDED->FAILED and regain it on re-landing —
+    the mechanism behind the hit-rate dip-and-recover."""
+    from repro.demand.catalog import ReplicaCatalog
+    world = get_scenario("paper-2022").build(seed=0, **SHAPE)
+    run_world(world, stats=EngineStats())
+    cat = ReplicaCatalog(world.table, "LLNL", ("ALCF", "OLCF"))
+    name = sorted(world.catalog)[0]
+    assert cat.holders(name) == {"ALCF", "OLCF"}
+    world.table.update(name, "ALCF", status=Status.FAILED, retries=0)
+    assert cat.holders(name) == {"OLCF"}
+    world.table.update(name, "OLCF", status=Status.FAILED, retries=0)
+    assert not cat.materialized(name)
+    world.table.update(name, "ALCF", status=Status.SUCCEEDED)
+    assert cat.holders(name) == {"ALCF"}
+
+
+def test_corrupt_under_demand_serves_and_ends_clean():
+    world, _, _ = _run(get_scenario("corrupt-under-demand"))
+    s = world.scrub.summary()
+    assert s["clean"]
+    d = world.demand.summary()
+    assert d["requests"] > 0 and d["hit_rate"] > 0
+
+
+# ------------------------------------------------------------- kill / resume
+def test_mid_scrub_kill_resume_digest_identical(tmp_path):
+    from repro.scenarios.crash_resume import (CRASH_RESUME_SCENARIOS,
+                                              run_crash_resume)
+    spec = CRASH_RESUME_SCENARIOS["crash-resume-scrub"]
+    res = run_crash_resume(spec, str(tmp_path), seed=0, scale=SHAPE["scale"],
+                           n_datasets=SHAPE["n_datasets"])
+    assert res["kills"], "kill point never fired"
+    assert res["match"], (res["reference"], res["resumed"])
+
+
+def test_scrub_state_dict_roundtrip():
+    world = get_scenario("scrub-and-repair").build(seed=0, **SHAPE)
+    # drive a few steps so the ledger is non-trivial, then snapshot-cycle it
+    run_world(world, stats=EngineStats())
+    eng = world.scrub
+    d = eng.state_dict()
+    world2 = get_scenario("scrub-and-repair").build(seed=0, **SHAPE)
+    world2.scrub.load_state_dict(d)
+    assert world2.scrub.state_dict() == d
+    assert world2.scrub.summary() == eng.summary()
+
+
+# --------------------------------------------- batched verify / localfs audit
+def _tree(root, files):
+    for rel, payload in files.items():
+        p = os.path.join(root, rel)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "wb") as f:
+            f.write(payload)
+
+
+def test_verify_many_reports_both_size_and_checksum(tmp_path):
+    rng = np.random.default_rng(0)
+    files = {"a.bin": rng.bytes(1000), "sub/b.bin": rng.bytes(2000),
+             "c.bin": rng.bytes(10)}
+    src = str(tmp_path / "src")
+    _tree(src, files)
+    m = Manifest.scan(src)
+
+    dst = str(tmp_path / "dst")
+    _tree(dst, files)
+    # same-size bit flip: only the checksum can catch it
+    flipped = bytearray(files["a.bin"])
+    flipped[100] ^= 0x40
+    _tree(dst, {"a.bin": bytes(flipped)})
+    # truncation: size AND checksum both wrong
+    _tree(dst, {"sub/b.bin": files["sub/b.bin"][:-3]})
+    os.remove(os.path.join(dst, "c.bin"))
+
+    rep = m.verify_many(dst)
+    assert rep["a.bin"] == {"ok": False, "size_ok": True,
+                            "checksum_ok": False,
+                            "problem": "checksum mismatch"}
+    assert not rep["sub/b.bin"]["ok"]
+    assert not rep["sub/b.bin"]["size_ok"]
+    assert not rep["sub/b.bin"]["checksum_ok"]
+    assert rep["c.bin"]["problem"] == "missing"
+    # the partial-scrub path: only the requested batch is read
+    part = m.verify_many(dst, rels=["a.bin"])
+    assert set(part) == {"a.bin"} and not part["a.bin"]["ok"]
+    # verify() stays the thin wrapper over verify_many
+    assert set(m.verify(dst)) == {"a.bin", "sub/b.bin", "c.bin"}
+    clean = str(tmp_path / "clean")
+    _tree(clean, files)
+    assert m.verify(clean) == {}
+    assert all(r["ok"] for r in m.verify_many(clean).values())
+
+
+def test_localfs_audit_shares_verify_many(tmp_path):
+    root = str(tmp_path)
+    rng = np.random.default_rng(1)
+    files = {"f0.bin": rng.bytes(4096), "sub/f1.bin": rng.bytes(512)}
+    _tree(os.path.join(root, "A", "data", "set1"), files)
+    tr = LocalFSTransport(root)
+    ds = Dataset("data/set1", sum(len(v) for v in files.values()), 2, 2)
+    assert tr.poll(tr.submit(ds, "A", "B")).status is Status.SUCCEEDED
+    assert all(r["ok"] for r in tr.audit(ds, "A", "B").values())
+    # rot one landed byte: the audit's checksum pass catches it
+    p = os.path.join(root, "B", "data", "set1", "f0.bin")
+    bad = bytearray(open(p, "rb").read())
+    bad[7] ^= 0x01
+    with open(p, "wb") as f:
+        f.write(bytes(bad))
+    rep = tr.audit(ds, "A", "B")
+    assert not rep["f0.bin"]["ok"] and rep["f0.bin"]["size_ok"]
+    assert rep["sub/f1.bin"]["ok"]
+    batch = tr.audit(ds, "A", "B", rels=["sub/f1.bin"])
+    assert set(batch) == {"sub/f1.bin"}
+
+
+# ------------------------------------------------------- streaming checksum
+def test_streaming_checksum_random_chunking_matches_whole_buffer():
+    """Deterministic chunking sweep (the hypothesis variant lives in
+    test_property.py): tiny <=3-byte chunks, empty updates, and odd tails
+    must all fold to the whole-buffer hash."""
+    from repro.core.integrity import StreamingChecksum
+    from repro.kernels.checksum.ref import checksum_bytes_np
+    rng = np.random.default_rng(0)
+    for size in (0, 1, 2, 3, 4, 5, 7, 63, 257, 4096, 10_001):
+        data = rng.bytes(size)
+        want = checksum_bytes_np(data)
+        for trial in range(4):
+            s = StreamingChecksum()
+            i = 0
+            while i < len(data):
+                step = int(rng.integers(0, 4))  # 0 = empty update
+                s.update(data[i:i + step])
+                i += step
+            s.update(b"")
+            assert s.digest() == want, (size, trial)
