@@ -39,6 +39,12 @@ the catalog-order ablation, and the no-traffic comparator, and records the
 serving SLOs plus the popular-first-beats-catalog-order verdict under the
 ``demand`` key of ``BENCH_scenarios.json``.
 
+``--ensemble-bench`` gates the batched ensemble engine's worlds/sec
+scaling: a 256-lane lockstep pass of ``ensemble-paper-bands`` must beat
+256 sequential scalar replays by >=20x, with every sampled lane matching
+its scalar trajectory bit-for-bit, recorded under the ``ensemble`` key of
+``BENCH_scenarios.json``.
+
 ``--integrity-bench`` replays ``scrub-and-repair`` (both engines), the
 ``bit-rot-paper`` no-scrub ablation, and the corruption-free comparator,
 and records the integrity summaries plus the ends-clean / repairs-converge
@@ -504,6 +510,76 @@ def policy_bench(seed: int = 0) -> dict:
     return out
 
 
+def ensemble_bench(n_lanes: int = 256, scale: float = 0.002,
+                   n_datasets: int = 4, sample: int = 8,
+                   min_speedup: float = 20.0) -> dict:
+    """Worlds/sec scaling gate for the batched ensemble engine: one
+    N-lane lockstep pass of ``ensemble-paper-bands`` must beat N
+    sequential scalar replays of the identical lanes by ``min_speedup``x.
+
+    Protocol: ``sample`` lanes replay through the scalar event engine
+    first (sequentially, the way a seed sweep runs without the lanes
+    engine) and project to N; the lanes engine then runs the full
+    ensemble twice (best-of-2 — the first pass pays allocator warm-up).
+    Speedup is a same-process, same-machine ratio, so runner speed
+    cancels.  Every sampled lane must match its lanes-engine row on the
+    full trajectory tuple — the bit-identity contract, enforced here on
+    ``sample`` lanes, not just lane 0."""
+    import dataclasses
+
+    from repro.ensemble.engine import run_ensemble, scalar_lane
+    from repro.ensemble.run import GATE_FIELDS
+    from repro.scenarios.registry import get_scenario
+
+    espec = dataclasses.replace(get_scenario("ensemble-paper-bands"),
+                                n_lanes=n_lanes)
+    lanes = espec.lane_specs()
+    t0 = time.time()
+    refs = [scalar_lane(spec, seed, label, scale, n_datasets)
+            for spec, seed, label in lanes[:sample]]
+    scalar_sample_s = time.time() - t0
+    scalar_projected_s = scalar_sample_s / sample * n_lanes
+
+    walls = []
+    for _ in range(2):
+        t0 = time.time()
+        res = run_ensemble(espec, scale=scale, n_datasets=n_datasets)
+        walls.append(time.time() - t0)
+    lanes_wall_s = min(walls)
+
+    mismatches = {}
+    for i, ref in enumerate(refs):
+        got = res.lane(i)
+        diff = {f: {"scalar": getattr(ref, f), "lanes": getattr(got, f)}
+                for f in GATE_FIELDS if getattr(ref, f) != getattr(got, f)}
+        if diff:
+            mismatches[i] = diff
+    speedup = scalar_projected_s / max(lanes_wall_s, 1e-9)
+    doc = {
+        "ensemble": espec.name, "n_lanes": n_lanes, "scale": scale,
+        "n_datasets": n_datasets, "engine": res.engine,
+        "backend": res.backend, "sample": sample,
+        "scalar_sample_s": round(scalar_sample_s, 3),
+        "scalar_projected_s": round(scalar_projected_s, 3),
+        "lanes_wall_s": round(lanes_wall_s, 3),
+        "speedup": round(speedup, 1),
+        "min_speedup": min_speedup,
+        "lanes_identical": not mismatches,
+        "mismatches": mismatches,
+        "lane0": {f: getattr(res.lane(0), f)
+                  for f in GATE_FIELDS if f != "bytes_at"},
+        "bands": res.bands,
+        "gate_ok": (not mismatches) and speedup >= min_speedup,
+    }
+    print(f"ensemble {espec.name}: {n_lanes} lanes in {lanes_wall_s:.3f}s "
+          f"vs {scalar_projected_s:.2f}s projected sequential "
+          f"({scalar_sample_s:.2f}s for {sample}) -> {speedup:.1f}x "
+          + ("OK" if doc["gate_ok"]
+             else f"!! gate FAILED (need >={min_speedup}x, "
+                  f"identical={not mismatches})"))
+    return doc
+
+
 def scaling(ns=SCALING_NS, scenario: str = "paper-2022", seed: int = 0) -> dict:
     rows = []
     for n in ns:
@@ -549,6 +625,15 @@ def main():
                     help="benchmark the overlapped two-campaign federation "
                          "vs its serial variant (both engines, source-cap "
                          "check) and record it in BENCH_scenarios.json")
+    ap.add_argument("--ensemble-bench", action="store_true",
+                    help="gate the batched ensemble engine's worlds/sec "
+                         "scaling (N=256 lockstep vs N sequential scalar "
+                         "replays, bit-identity enforced on sampled lanes) "
+                         "and record it in BENCH_scenarios.json")
+    ap.add_argument("--ensemble-lanes", type=int, default=256,
+                    help="lane count for --ensemble-bench")
+    ap.add_argument("--min-speedup", type=float, default=20.0,
+                    help="speedup floor for --ensemble-bench")
     ap.add_argument("--scaling", action="store_true",
                     help="replay --scenario at increasing catalog sizes and "
                          "record the scaling curve in BENCH_scenarios.json")
@@ -565,6 +650,15 @@ def main():
         key = ("scaling" if args.scenario == "paper-2022"
                else f"scaling_{args.scenario}")
         emit_bench([], path=args.bench_out, extra={key: doc})
+        return
+    if args.ensemble_bench:
+        doc = ensemble_bench(n_lanes=args.ensemble_lanes,
+                             min_speedup=args.min_speedup)
+        emit_bench([], path=args.bench_out, extra={"ensemble": doc})
+        print(json.dumps({k: v for k, v in doc.items() if k != "bands"},
+                         indent=2))
+        if not doc["gate_ok"]:
+            raise SystemExit(1)
         return
     if args.policy_bench:
         doc = policy_bench()

@@ -65,9 +65,50 @@ def check(baseline: dict, candidate: dict, max_regress: float) -> list:
                          f"baseline {b_ev.get(key)} vs candidate {c_ev.get(key)}")
     _wall_gate("paper-2022", base, cand, max_regress, fails)
     fails.extend(check_federation(baseline, candidate, max_regress))
+    fails.extend(check_ensemble(baseline, candidate))
     fails.extend(check_policy(baseline, candidate))
     fails.extend(check_demand(baseline, candidate))
     fails.extend(check_integrity(baseline, candidate))
+    return fails
+
+
+def check_ensemble(baseline: dict, candidate: dict) -> list:
+    """Ensemble gate: the 256-lane lockstep replay must stay bit-identical
+    to the scalar engine on every sampled lane (trajectory tuple + quantile
+    bands, both machine-independent), and the measured worlds/sec speedup —
+    a same-process ratio, so runner speed cancels — must stay at or above
+    the bench's floor (>=20x by default)."""
+    fails = []
+    base = baseline.get("ensemble")
+    if base is None:
+        return []               # pre-ensemble baseline: nothing to gate
+    cand = candidate.get("ensemble")
+    if cand is None:
+        return ["candidate is missing the ensemble block "
+                "(run benchmarks/campaign_replay.py --ensemble-bench)"]
+    for key in ("ensemble", "n_lanes", "scale", "n_datasets", "sample"):
+        if base.get(key) != cand.get(key):
+            return [f"ensemble benchmark shapes differ on {key}: baseline "
+                    f"{base.get(key)} vs candidate {cand.get(key)}"]
+    for key in ("iterations", "sim_days", "faults_total", "quarantined",
+                "succeeded_digest", "timed_out"):
+        if base.get("lane0", {}).get(key) != cand.get("lane0", {}).get(key):
+            fails.append(
+                f"ensemble determinism drift in lane0.{key}: baseline "
+                f"{base.get('lane0', {}).get(key)} vs candidate "
+                f"{cand.get('lane0', {}).get(key)}")
+    if base.get("bands") != cand.get("bands"):
+        fails.append("ensemble quantile bands drifted from baseline "
+                     "(the 256-lane trajectory set changed)")
+    if not cand.get("lanes_identical"):
+        fails.append("ensemble lanes engine diverged from the scalar "
+                     f"engine: mismatches={cand.get('mismatches')}")
+    if cand.get("speedup", 0.0) < cand.get("min_speedup", 20.0):
+        fails.append(
+            f"ensemble worlds/sec speedup fell below the floor: "
+            f"{cand.get('speedup')}x < {cand.get('min_speedup')}x "
+            f"(lanes {cand.get('lanes_wall_s')}s vs projected sequential "
+            f"{cand.get('scalar_projected_s')}s)")
     return fails
 
 

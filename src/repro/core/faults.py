@@ -85,6 +85,20 @@ class FaultInjector:
         lam = self.transient_per_tb * (nbytes / 1024 ** 4) * self.fragility(dataset)
         return int(self.rng.poisson(lam))
 
+    def transient_marks(self, dataset: str, nbytes: int) -> List[float]:
+        """The complete submit-time draw for one transfer: fault count, then
+        the sorted byte positions of each transient fault.  This is the ONLY
+        way a transfer may consume the shared stream — the scalar transport
+        and the ensemble lanes engine both call it, so their per-seed RNG
+        consumption is identical by construction.  Draw order (fragility
+        memo, Poisson count, uniform positions) is part of the determinism
+        contract; reordering it changes every trajectory after the first
+        fault."""
+        n = self.n_transient_faults(dataset, nbytes)
+        if not n:
+            return []
+        return sorted(float(b) for b in self.rng.uniform(0, nbytes, n))
+
     def is_persistent_unreadable(self, dataset: str) -> bool:
         # deterministic per (seed, dataset) — and, unlike Python's hash(),
         # identical across processes regardless of PYTHONHASHSEED

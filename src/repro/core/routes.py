@@ -20,6 +20,38 @@ PB = 1024 ** 5
 DAY = 86400.0
 
 
+def fair_share_rates(route_bw, read_cap, write_cap, n_route, src_load,
+                     dst_load, src_knee=None, dst_knee=None, xp=None):
+    """Vectorized fair-share allocation — the pure arithmetic core of
+    ``RouteGraph.effective_rate``, elementwise over arbitrarily-shaped
+    arrays (numpy or jax.numpy via ``xp``) so the ensemble lanes engine can
+    price every route of every lane in one shot.
+
+    All inputs broadcast together: per-route bandwidth and the owning
+    sites' read/write caps against the route's active count and the site
+    loads (``n_route``/``src_load``/``dst_load`` are clamped to ≥ 1 exactly
+    as the scalar path's ``max(1, ·)`` / ``or 1`` do).  Contention knees are
+    scalars or arrays with ``inf`` (or ``None``) meaning "no knee declared".
+    Missing routes are encoded as ``route_bw == 0`` and price to 0.0.  The
+    expression tree (divide, multiply, min — no reassociation) is identical
+    to the scalar path, so results agree bit-for-bit in float64.
+    """
+    import numpy as _np
+    if xp is None:
+        xp = _np
+    inf = float("inf")
+    sk = inf if src_knee is None else src_knee
+    dk = inf if dst_knee is None else dst_knee
+    nr = xp.maximum(1, n_route)
+    sl = xp.maximum(1, src_load)
+    dl = xp.maximum(1, dst_load)
+    with _np.errstate(divide="ignore", invalid="ignore"):
+        src_cap = xp.where(sl <= sk, read_cap, read_cap * (sk / sl))
+        dst_cap = xp.where(dl <= dk, write_cap, write_cap * (dk / dl))
+        return xp.minimum(route_bw / nr,
+                          xp.minimum(src_cap / sl, dst_cap / dl))
+
+
 @dataclass
 class Dataset:
     """One ESGF path (a directory tree)."""
@@ -87,11 +119,11 @@ class RouteGraph:
         if r is None:
             return 0.0
         s_src, s_dst = self.sites[src], self.sites[dst]
-        return min(r.bandwidth / n_route,
-                   self._contended(s_src.read_bw, src_load,
-                                   s_src.concurrency_knee) / src_load,
-                   self._contended(s_dst.write_bw, dst_load,
-                                   s_dst.concurrency_knee) / dst_load)
+        # one shared arithmetic with the batched lanes engine (bit-identical)
+        return float(fair_share_rates(
+            r.bandwidth, s_src.read_bw, s_dst.write_bw,
+            n_route, src_load, dst_load,
+            s_src.concurrency_knee, s_dst.concurrency_knee))
 
 
 # --------------------------------------------------------------- paper setup
@@ -141,11 +173,20 @@ _EXPERIMENTS = ["historical", "amip", "piControl", "abrupt-4xCO2", "ssp585",
                 "ssp245", "esm-hist", "1pctCO2"]
 
 
+_PATH_CACHE: dict = {}
+
+
 def _esgf_path(i: int, rng) -> str:
-    inst = _INSTITUTIONS[i % len(_INSTITUTIONS)]
-    exp = _EXPERIMENTS[(i // len(_INSTITUTIONS)) % len(_EXPERIMENTS)]
-    phase = "CMIP6" if (i % 10) < 9 else "CMIP5"   # ~90% CMIP6 by count
-    return f"/css03_data/{phase}/CMIP/{inst}/model-{i % 97}/{exp}/r{i}i1p1f1"
+    # pure function of i (rng unused); memoized — every catalog re-derives
+    # the same name table
+    p = _PATH_CACHE.get(i)
+    if p is None:
+        inst = _INSTITUTIONS[i % len(_INSTITUTIONS)]
+        exp = _EXPERIMENTS[(i // len(_INSTITUTIONS)) % len(_EXPERIMENTS)]
+        phase = "CMIP6" if (i % 10) < 9 else "CMIP5"   # ~90% CMIP6 by count
+        p = f"/css03_data/{phase}/CMIP/{inst}/model-{i % 97}/{exp}/r{i}i1p1f1"
+        _PATH_CACHE[i] = p
+    return p
 
 
 def split_oversized(ds: Dataset, scan_limit_files: int) -> List[Dataset]:

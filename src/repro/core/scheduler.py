@@ -34,6 +34,28 @@ transitions and maintains
 Heap entries are validated against the live row when popped (lazy deletion),
 so stale entries cost O(log n) once and the common-case step touches only
 rows that can actually change state.
+
+Determinism invariants (relied on by snapshots, the engine-equivalence tests,
+and the ensemble lanes engine):
+
+* **Submission order is the RNG order.**  Every ``_start`` calls
+  ``transport.submit``, which consumes the shared fault stream; therefore
+  the order rows are started — direct pops in (priority, dataset) order per
+  destination, primary before secondaries, relays in replica/donor priority
+  order, re-admitted quarantined rows strictly after the ordinary eligibles
+  of the same pass — is part of the trajectory, not an implementation
+  detail.
+* **Poll order is (dataset, destination) order.**  ``_poll`` walks
+  ``by_status`` rows in sorted order and commits one batched transaction,
+  so listener-driven queue insertions happen in a reproducible sequence.
+* **Retry disposition is a pure function** (``retry_disposition``): a
+  FAILED poll result maps to (retries+1, QUARANTINED-vs-FAILED) from the
+  row's retry count and the policy alone, with no hidden state.
+* **Relay donors are historical.**  A relay candidate is bucketed under the
+  donor ``_first_donor`` picked when it was *enqueued* and only migrates
+  when popped; with ≤ 2 replicas the donor is unique and the bucketing is a
+  pure function of table state — the property the ensemble lanes engine
+  asserts before vectorizing.
 """
 from __future__ import annotations
 
@@ -66,6 +88,16 @@ class ReplicationPolicy:
 
 OCCUPYING = (Status.ACTIVE, Status.QUEUED, Status.PAUSED)
 _RETRYABLE_SET = frozenset(RETRYABLE)
+
+
+def retry_disposition(retries_done, max_retries):
+    """Pure retry/quarantine rule for a FAILED poll result: returns
+    ``(retries, quarantine)`` where ``retries`` is the incremented count and
+    ``quarantine`` is True once it exceeds ``max_retries``.  Elementwise on
+    arrays (numpy/jax) so the ensemble lanes engine applies the identical
+    rule to a whole batch of worlds at once."""
+    retries = retries_done + 1
+    return retries, retries > max_retries
 
 # direct-queue heap entry: a bare dataset name (dataset order, the seed
 # model) or a (priority, dataset) pair once a priority function is installed
@@ -238,8 +270,9 @@ class ReplicationScheduler:
                 upd.update(status=Status.SUCCEEDED, completed=now)
                 actions.append(f"SUCCEEDED {rec.source}->{rec.destination} {rec.dataset}")
             elif st.status == Status.FAILED:
-                retries = rec.retries + 1
-                if retries > self.retry.max_retries:
+                retries, quarantine = retry_disposition(
+                    rec.retries, self.retry.max_retries)
+                if quarantine:
                     upd.update(status=Status.QUARANTINED, retries=retries)
                     # release any transport-side residue of the quarantined
                     # transfer (no-op for transports whose FAILED is terminal)

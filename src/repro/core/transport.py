@@ -21,6 +21,30 @@ local filesystem with checksum verification and retransmission of corrupted
 files; used by checkpoint replication and the end-to-end examples.  Files
 stream through in fixed-size chunks with incremental checksumming — nothing
 is ever ``read()`` whole into memory.
+
+Determinism invariants (enforced by the engine-equivalence and crash-resume
+tests; every engine that drives this transport relies on them):
+
+  * **Segment-exactness** — a mover's trajectory is independent of how wall
+    time is sliced into ticks.  ``_advance_mover`` processes stalls, fault
+    marks, the unreadable halt point, and completion in byte order within a
+    tick, so fixed-step, event-driven, and ensemble drivers produce
+    bit-identical ``bytes_done``/``active_s``/fault sequences.
+  * **One shared arithmetic** — the vectorized SoA fast path, the scalar
+    walk, and the ensemble lanes engine compute every advance through the
+    pure helpers ``consume_stall`` / ``advance_segment`` (or expressions
+    proven operation-for-operation identical to them), in float64.  Any
+    reformulation (e.g. a fused multiply-add) changes trajectories.
+  * **RNG consumption order** — the fault stream is consumed ONLY at
+    ``submit`` via ``FaultInjector.transient_marks`` (fragility memo →
+    Poisson count → uniform positions), in submission order.  Scheduler
+    start order therefore determines the entire fault history.
+  * **Rate snapshotting** — fair-share rates (``_route_rates``) are computed
+    once per tick from the mover population *before* any scan finishes or
+    mover completes within that tick, and held constant across the tick.
+  * **Hint/advance agreement** — ``next_event_hint`` uses the same shared
+    scan rate and fair-share rates as the tick advance, so a projected
+    completion time is exactly when the advance lands it.
 """
 from __future__ import annotations
 
@@ -48,6 +72,38 @@ class SimClock:
 
 # fraction of a dataset transferred before its unreadable files are reached
 UNREADABLE_HALT_FRACTION = 0.25
+
+
+# ---------------------------------------------------------- pure segment math
+# The two arithmetic steps of the mover segment walk, as pure float64 array
+# functions.  The SoA fast path below and the ensemble lanes engine
+# (repro.ensemble) call THESE — not re-derived formulas — so every driver
+# advances movers through literally the same operations.  Scalars broadcast.
+
+def consume_stall(t, stall):
+    """Consume pending fault-stall time first (the walk's first branch):
+    ``used = min(stall, t)``; returns ``(t - used, stall - used)``."""
+    used = np.minimum(stall, t)
+    return t - used, stall - used
+
+
+def advance_segment(t, bytes_done, rate, bound):
+    """Advance toward the next byte boundary at fair-share ``rate`` for up to
+    ``t`` seconds.  ``bound`` is the nearest of completion / halt point /
+    first fault mark.  Returns ``(t_left, new_bytes, active_add, moved,
+    hit)`` where ``hit`` marks movers that reached the boundary within
+    ``t`` (``need <= t``, the walk's branch condition).  Movers with
+    ``rate <= 0`` get ``need = inf`` and never hit; callers gate them."""
+    inf = float("inf")
+    with np.errstate(divide="ignore", invalid="ignore"):
+        need = np.where(rate > 0,
+                        np.maximum(0.0, bound - bytes_done) / rate, inf)
+    hit = need <= t
+    adv = np.where(hit, need, t)
+    new_bytes = np.where(hit, bound, bytes_done + rate * t)
+    moved = rate * adv
+    t_left = np.where(hit, t - need, 0.0)
+    return t_left, new_bytes, adv, moved, hit
 
 
 def shared_scan_rate(site, scanners: int) -> float:
@@ -150,11 +206,8 @@ class SimulatedTransport(Transport):
                      submitted_at=self.clock.now,
                      setup_left=float(self.task_setup_s),
                      scan_files_left=float(dataset.files))
-        n_faults = self.injector.n_transient_faults(dataset.path, dataset.bytes)
-        if n_faults:
-            rng = self.injector.rng
-            x.fault_marks = sorted(
-                float(b) for b in rng.uniform(0, dataset.bytes, n_faults))
+        x.fault_marks = self.injector.transient_marks(dataset.path,
+                                                      dataset.bytes)
         self._live[uid] = x
         return uid
 
@@ -376,17 +429,15 @@ class SimulatedTransport(Transport):
             if x.fault_marks and x.fault_marks[0] < nxt:
                 nxt = x.fault_marks[0]
             bound[i] = nxt
-        # stall is consumed first (exactly as the scalar loop does)
-        rem = np.maximum(0.0, dt - st)
-        with np.errstate(divide="ignore", invalid="ignore"):
-            need = np.where(rate > 0,
-                            np.maximum(0.0, bound - bd) / rate, inf)
-        # movers whose whole dt is eaten by stall never reach a boundary;
-        # otherwise the fast path requires rate > 0, not already at the halt
-        # point, and the next boundary strictly beyond this tick
-        fast = (rem <= 1e-9) | ((rate > 0) & (bd < halt) & (need > rem))
-        new_stall = np.maximum(0.0, st - dt)
-        moved = np.where(rem > 1e-9, rate * rem, 0.0)
+        # stall is consumed first (exactly as the scalar loop does), then one
+        # shared segment step classifies each mover.  Movers whose whole dt
+        # is eaten by stall never reach a boundary; otherwise the fast path
+        # requires rate > 0, not already at the halt point, and the next
+        # boundary strictly beyond this tick (``~hit``) — only boundary
+        # crossers take the segment-exact scalar walk.
+        rem, new_stall = consume_stall(dt, st)
+        _, new_bd, adv, moved, hit = advance_segment(rem, bd, rate, bound)
+        fast = (rem <= 1e-9) | ((rate > 0) & (bd < halt) & ~hit)
         for i, x in enumerate(movers):
             if not fast[i]:
                 self._advance_mover(x, dt,
@@ -395,8 +446,8 @@ class SimulatedTransport(Transport):
             x.stall_left = float(new_stall[i])
             r = float(rem[i])
             if r > 1e-9:
-                x.bytes_done += float(rate[i]) * r
-                x.active_s += r
+                x.bytes_done = float(new_bd[i])
+                x.active_s += float(adv[i])
                 self._log_flow((x.source, x.destination), float(moved[i]))
 
     def _advance_mover(self, x: _SimXfer, dt: float, rate: float) -> None:

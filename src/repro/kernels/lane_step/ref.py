@@ -1,0 +1,20 @@
+"""Numpy reference for the batched lane segment step.
+
+This is definitionally ``repro.core.transport.advance_segment`` — the exact
+expressions the scalar engine and the numpy lanes backend run — re-exported
+so the kernel package is self-describing: ``lane_step`` must reproduce THIS
+function (to float64 round-off; see the FMA note in
+``repro.ensemble.batch``)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.transport import advance_segment
+
+
+def lane_segment_step_np(t, bytes_done, rate, bound):
+    """(t_left, new_bytes, adv, moved, hit) over [lane, row] float64."""
+    t = np.broadcast_to(np.asarray(t, np.float64), np.shape(bytes_done))
+    return advance_segment(t, np.asarray(bytes_done, np.float64),
+                           np.asarray(rate, np.float64),
+                           np.asarray(bound, np.float64))

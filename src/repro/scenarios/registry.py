@@ -15,6 +15,7 @@ from typing import Dict, List
 from repro.control.policy import TransferPolicySpec
 from repro.core.routes import GB, TB
 from repro.core.scrub import ScrubSpec
+from repro.ensemble.spec import AxisSpec, EnsembleSpec
 from repro.scenarios.crash_resume import (CRASH_RESUME_SCENARIOS,
                                           CrashResumeSpec)
 from repro.demand.spec import DemandSpec
@@ -403,6 +404,47 @@ FEDERATION_PAPER_AND_TOPUP = FederationSpec(
     shared_sites=("LLNL", "ALCF", "OLCF"))
 
 
+# ------------------------------------------------------ ensemble scenarios
+# Batched what-if studies over the specs above: a base scenario plus
+# perturbation axes, run as N lanes in lockstep by repro.ensemble (or as N
+# scalar replays when the base needs an event-driven subsystem).
+
+ENSEMBLE_PAPER_BANDS = EnsembleSpec(
+    name="ensemble-paper-bands",
+    base=PAPER_2022,
+    n_lanes=256)                     # pure seed sweep; lane 0 == paper-2022
+"""Confidence bands for the headline result: the 2022 campaign replayed
+across 256 world seeds (catalog draw + fault stream), reduced to
+p5/p50/p95 campaign days.  Lane 0 is the unperturbed paper-2022 world the
+bit-identity gate replays against the scalar engine."""
+
+AIMD_SEARCH = EnsembleSpec(
+    name="aimd-search",
+    base=LOSSY_ROUTE_TUNING,
+    axes=(AxisSpec("policy.fault_budget", (4, 8, 16)),
+          AxisSpec("policy.drop_fraction", (0.10, 0.15, 0.25)),
+          AxisSpec("policy.control_interval_s",
+                   (3 * 3600.0, 6 * 3600.0, 12 * 3600.0))),
+    n_lanes=27, mode="grid")
+"""Grid search over the AIMD tuner's constants on the lossy-route scenario
+(3 x 3 x 3 = 27 lanes).  Policy axes compile to a control plane, so this
+ensemble runs on the scalar fallback; the search driver checkpoints
+progress between chunks."""
+
+SEED_SWEEP_FEDERATION = EnsembleSpec(
+    name="seed-sweep-federation",
+    base=FEDERATION_PAPER_TWICE,
+    n_lanes=8)
+"""Seed sweep over the overlapped two-campaign federation — federations
+need the shared-transport scalar path, so every lane is an independent
+event-engine replay reduced to one row (span days, summed counters)."""
+
+_ENSEMBLE_REGISTRY: Dict[str, EnsembleSpec] = {
+    s.name: s for s in (ENSEMBLE_PAPER_BANDS, AIMD_SEARCH,
+                        SEED_SWEEP_FEDERATION)
+}
+
+
 _REGISTRY: Dict[str, ScenarioSpec] = {
     s.name: s for s in (
         PAPER_2022, FOUR_SITE_MESH, DEGRADED_SOURCE, FAULT_STORM,
@@ -438,6 +480,11 @@ def list_crash_scenarios() -> List[str]:
     return sorted(_CRASH_REGISTRY)
 
 
+def list_ensembles() -> List[str]:
+    """Names of the ensemble (batched what-if) scenario family."""
+    return sorted(_ENSEMBLE_REGISTRY)
+
+
 def scenario_tags(spec) -> List[str]:
     """Feature tags for a registry entry (``--list`` annotations): which
     opt-in subsystems the scenario exercises."""
@@ -445,6 +492,10 @@ def scenario_tags(spec) -> List[str]:
     if isinstance(spec, CrashResumeSpec):
         tags.append("crash-resume")
         spec = get_scenario(spec.base)   # tag by the wrapped base scenario
+    if isinstance(spec, EnsembleSpec):
+        tags.append("ensemble")
+        tags.extend(scenario_tags(spec.base))   # tag by the base scenario
+        return tags
     if isinstance(spec, FederationSpec):
         tags.append("federation")
         if any(m.scenario.policy.enabled for m in spec.members) or (
@@ -468,16 +519,18 @@ def scenario_tags(spec) -> List[str]:
 
 def get_scenario(name: str):
     """Look up a scenario by name: a ``ScenarioSpec``, a ``FederationSpec``
-    for the federation family, or a ``CrashResumeSpec`` for the crash-resume
-    family."""
+    for the federation family, a ``CrashResumeSpec`` for the crash-resume
+    family, or an ``EnsembleSpec`` for the ensemble family."""
     if name in _REGISTRY:
         return _REGISTRY[name]
     if name in _FEDERATION_REGISTRY:
         return _FEDERATION_REGISTRY[name]
     if name in _CRASH_REGISTRY:
         return _CRASH_REGISTRY[name]
+    if name in _ENSEMBLE_REGISTRY:
+        return _ENSEMBLE_REGISTRY[name]
     known = (sorted(_REGISTRY) + sorted(_FEDERATION_REGISTRY)
-             + sorted(_CRASH_REGISTRY))
+             + sorted(_CRASH_REGISTRY) + sorted(_ENSEMBLE_REGISTRY))
     raise KeyError(
         f"unknown scenario {name!r}; available: {', '.join(known)}")
 
@@ -489,6 +542,8 @@ def register(spec):
         _CRASH_REGISTRY[spec.name] = spec
     elif isinstance(spec, FederationSpec):
         _FEDERATION_REGISTRY[spec.name] = spec
+    elif isinstance(spec, EnsembleSpec):
+        _ENSEMBLE_REGISTRY[spec.name] = spec
     else:
         _REGISTRY[spec.name] = spec
     return spec

@@ -11,6 +11,26 @@ runs through exactly the code path the paper-2022 reproduction uses.
 Capacity-planning questions ("what if the source were slower?  what if
 maintenance doubled?  what if a fourth site joined?") become one-line edits
 to a spec or entries in ``repro.scenarios.registry``.
+
+Determinism invariants (what makes ``(spec, scale, seed, n_datasets)`` a
+complete trajectory key, relied on by snapshots, the engine-equivalence
+tests, and the ensemble lanes engine):
+
+* ``build()`` is a pure function of its arguments: same spec + same
+  ``(scale, seed, n_datasets)`` always wires the same world.  Specs are
+  frozen dataclasses; ``vary()`` copies, never mutates.
+* Exactly three RNG streams exist, all derived from ``seed``:
+  the **catalog** stream (``make_catalog(seed)`` sizes + the
+  ``default_rng(seed + 1)`` unreadable-marking draw in ``build_catalog``),
+  the **fault** stream (``FaultInjector(seed)`` — consumed only at transfer
+  submission, in submission order, via ``transient_marks``; plus the
+  per-replica pure ``latent_corrupt_offsets`` draws which consume nothing),
+  and the **demand** stream (``DemandEngine``'s arrival process, seeded
+  ``default_rng([seed, 0x44454D44])`` so it can never interleave with the
+  fault stream — absent under ``NO_DEMAND``).
+* Everything else is derived: pause calendars come from the spec's outage
+  list, control-plane decisions from observed state, scrub schedules from
+  the spec.  No component reads the wall clock or an unseeded RNG.
 """
 from __future__ import annotations
 

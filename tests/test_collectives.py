@@ -7,6 +7,7 @@ import textwrap
 import numpy as np
 import pytest
 
+from conftest import jax_subprocess_env
 from repro.core.relay_collectives import (estimate_naive_time,
                                           estimate_relay_time)
 
@@ -26,8 +27,6 @@ def test_relay_beats_naive_fanout_analytically():
 
 
 _SUBPROC = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import sys
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp, numpy as np
@@ -79,6 +78,7 @@ _SUBPROC = textwrap.dedent("""
 
 def test_relay_collectives_on_8_devices():
     r = subprocess.run([sys.executable, "-c", _SUBPROC], cwd=".",
+                       env=jax_subprocess_env(devices=8),
                        capture_output=True, text=True, timeout=300)
     assert r.returncode == 0, r.stderr[-3000:]
     for marker in ("RELAY_OK", "NAIVE_OK", "RING_OK", "HLO_OK"):
@@ -87,8 +87,6 @@ def test_relay_collectives_on_8_devices():
 
 def test_compressed_psum_on_4_devices():
     code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import sys
         sys.path.insert(0, "src")
         import jax, jax.numpy as jnp, numpy as np
@@ -110,6 +108,7 @@ def test_compressed_psum_on_4_devices():
         print("COMPRESS_OK")
     """)
     r = subprocess.run([sys.executable, "-c", code], cwd=".",
+                       env=jax_subprocess_env(devices=4),
                        capture_output=True, text=True, timeout=300)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "COMPRESS_OK" in r.stdout
