@@ -580,6 +580,94 @@ def ensemble_bench(n_lanes: int = 256, scale: float = 0.002,
     return doc
 
 
+class _PhaseProfiler:
+    """Per-phase wall-time buckets via temporary class-method wrappers.
+
+    Exclusive-time accounting: a stack tracks the active bucket, and time
+    spent in a nested instrumented call (``TransferTable`` work inside
+    ``ReplicationScheduler.step``, say) is charged to the inner bucket and
+    subtracted from the outer one, so the buckets sum to at most the run's
+    wall clock and never double-count.  Wrapping happens at class level so
+    federation members (N schedulers over one transport) are all captured.
+    Instrumentation only *times* the original calls — trajectories are
+    untouched — but the measured run is slower than a bare one, so profile
+    numbers are recorded alongside, never instead of, the scaling walls.
+    """
+
+    def __init__(self):
+        self.buckets = {}
+        self._stack = []
+        self._patched = []
+
+    def wrap(self, cls, name: str, bucket: str) -> None:
+        orig = getattr(cls, name)
+
+        def timed(s, *a, _orig=orig, _b=bucket, **kw):
+            t0 = time.perf_counter()
+            self._stack.append([_b, 0.0])
+            try:
+                return _orig(s, *a, **kw)
+            finally:
+                dt = time.perf_counter() - t0
+                b, child = self._stack.pop()
+                self.buckets[b] = self.buckets.get(b, 0.0) + (dt - child)
+                if self._stack:
+                    self._stack[-1][1] += dt
+
+        setattr(cls, name, timed)
+        self._patched.append((cls, name, orig))
+
+    def restore(self) -> None:
+        for cls, name, orig in self._patched:
+            setattr(cls, name, orig)
+        self._patched.clear()
+
+
+def profile_run(scenario: str = "paper-2022", n_datasets: int = None,
+                seed: int = 0, scale: float = 1.0) -> dict:
+    """One instrumented event-engine replay split into per-phase buckets:
+    sched (dispatch/poll), transport (tick + next-event hints), table
+    (row/index churn, charged exclusively), control/demand/scrub (the
+    opt-in planes), and driver (the run_world loop remainder)."""
+    from repro.control.plane import ControlPlane
+    from repro.core.scheduler import ReplicationScheduler
+    from repro.core.scrub import ScrubEngine
+    from repro.core.transfer_table import TransferTable
+    from repro.core.transport import SimulatedTransport
+    from repro.demand.engine import DemandEngine
+    from repro.scenarios.events import EngineStats, run_scenario
+
+    prof = _PhaseProfiler()
+    prof.wrap(ReplicationScheduler, "step", "sched")
+    prof.wrap(SimulatedTransport, "tick", "transport")
+    prof.wrap(SimulatedTransport, "next_event_hint", "transport")
+    prof.wrap(TransferTable, "update_many", "table")
+    prof.wrap(TransferTable, "by_status", "table")
+    prof.wrap(ControlPlane, "step", "control")
+    prof.wrap(DemandEngine, "step", "demand")
+    prof.wrap(ScrubEngine, "step", "scrub")
+    stats = EngineStats()
+    t0 = time.time()
+    try:
+        run_scenario(scenario, engine="events", scale=scale, seed=seed,
+                     n_datasets=n_datasets, stats=stats)
+    finally:
+        prof.restore()
+    wall = time.time() - t0
+    phases = {b: round(t, 3) for b, t in sorted(prof.buckets.items())}
+    phases["driver"] = round(max(0.0, wall - sum(prof.buckets.values())), 3)
+    return {
+        "scenario": scenario,
+        "n_datasets": n_datasets,
+        "seed": seed,
+        "wall_s": round(wall, 3),
+        "iterations": stats.iterations,
+        "phases_s": phases,
+        "phases_pct": {b: round(100.0 * t / max(wall, 1e-9), 1)
+                       for b, t in phases.items()},
+    }
+
+
 def scaling(ns=SCALING_NS, scenario: str = "paper-2022", seed: int = 0) -> dict:
     rows = []
     for n in ns:
@@ -640,6 +728,12 @@ def main():
     ap.add_argument("--scaling-ns", default=None,
                     help="comma-separated catalog sizes for --scaling "
                          f"(default {','.join(map(str, SCALING_NS))})")
+    ap.add_argument("--profile", action="store_true",
+                    help="instrumented replay splitting wall time into "
+                         "sched/transport/table/control/demand/scrub/driver "
+                         "buckets; alone it profiles --scenario at "
+                         "--datasets, with --scaling it attaches the "
+                         "breakdown at the largest sweep point")
     ap.add_argument("--bench-out", default="BENCH_scenarios.json")
     args = ap.parse_args()
     from repro.scenarios.sweep import emit_bench
@@ -647,9 +741,21 @@ def main():
         ns = (tuple(int(s) for s in args.scaling_ns.split(","))
               if args.scaling_ns else SCALING_NS)
         doc = scaling(ns, scenario=args.scenario)
+        if args.profile:
+            doc["profile"] = profile_run(args.scenario, n_datasets=max(ns))
+            print(json.dumps(doc["profile"], indent=2))
         key = ("scaling" if args.scenario == "paper-2022"
                else f"scaling_{args.scenario}")
         emit_bench([], path=args.bench_out, extra={key: doc})
+        return
+    if args.profile:
+        datasets = args.datasets if args.datasets != 2291 else None
+        doc = profile_run(args.scenario, n_datasets=datasets,
+                          scale=args.scale)
+        key = ("profile" if args.scenario == "paper-2022"
+               else f"profile_{args.scenario}")
+        emit_bench([], path=args.bench_out, extra={key: doc})
+        print(json.dumps(doc, indent=2))
         return
     if args.ensemble_bench:
         doc = ensemble_bench(n_lanes=args.ensemble_lanes,

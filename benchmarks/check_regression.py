@@ -69,6 +69,118 @@ def check(baseline: dict, candidate: dict, max_regress: float) -> list:
     fails.extend(check_policy(baseline, candidate))
     fails.extend(check_demand(baseline, candidate))
     fails.extend(check_integrity(baseline, candidate))
+    fails.extend(check_scaling(baseline, candidate, max_regress))
+    return fails
+
+
+# absolute wall budget for the full 29M-file two-destination replay (the
+# acceptance criterion is "minutes on one core"; the replay takes ~5 s on a
+# development machine, so 600 s leaves two orders of magnitude of headroom
+# for slow CI runners while still catching an O(files) regression, which
+# would blow through it immediately)
+WALL_BUDGET_29M_S = 600.0
+
+
+def check_scaling(baseline: dict, candidate: dict,
+                  max_regress: float) -> list:
+    """Scaling gate, three parts:
+
+      * determinism: every catalog-size point of the ``scaling`` and
+        ``scaling_mega-campaign`` sweeps must reproduce the baseline's
+        iteration count, simulated days, and fault totals exactly;
+      * flat curve: the ratio of us/iteration at the largest point to the
+        smallest point (machine speed cancels out of the ratio) may not
+        regress more than ``max_regress`` vs the baseline's ratio — this is
+        the O(active)-not-O(catalog) property, including the mega-campaign
+        point normalized against the same candidate run's smallest
+        paper-2022 point;
+      * wall budget: the full 29M-file ``paper-29m-twice`` replay (the
+        ``profile_paper-29m-twice`` block) must complete inside
+        ``WALL_BUDGET_29M_S`` — an absolute bound, deliberately loose
+        enough for slow runners but far below what any O(files) path
+        would cost."""
+    fails = []
+    base = baseline.get("scaling")
+    if base is None:
+        return []               # pre-scaling baseline: nothing to gate
+    cand = candidate.get("scaling")
+    if cand is None:
+        return ["candidate is missing the scaling block "
+                "(run benchmarks/campaign_replay.py --scaling)"]
+
+    def points(doc):
+        return {p["n_datasets"]: p for p in doc.get("points", [])}
+
+    def pin_points(tag, b_pts, c_pts):
+        for n, bp in sorted(b_pts.items()):
+            cp = c_pts.get(n)
+            if cp is None:
+                fails.append(f"{tag} point n={n} missing from candidate")
+                continue
+            for key in ("iterations", "duration_days", "faults_total",
+                        "quarantined"):
+                if bp.get(key) != cp.get(key):
+                    fails.append(
+                        f"{tag} determinism drift at n={n}.{key}: baseline "
+                        f"{bp.get(key)} vs candidate {cp.get(key)}")
+
+    def us_per_iter(pts, n):
+        return max(pts[n]["us_per_iteration"], 1e-9)
+
+    b_pts, c_pts = points(base), points(cand)
+    pin_points("scaling", b_pts, c_pts)
+    shared = sorted(set(b_pts) & set(c_pts))
+    if len(shared) >= 2:
+        lo, hi = shared[0], shared[-1]
+        b_flat = us_per_iter(b_pts, hi) / us_per_iter(b_pts, lo)
+        c_flat = us_per_iter(c_pts, hi) / us_per_iter(c_pts, lo)
+        limit = b_flat * (1.0 + max_regress)
+        if c_flat > limit:
+            fails.append(
+                f"scaling curve is no longer flat: us/iteration grows "
+                f"{c_flat:.3f}x from n={lo} to n={hi} "
+                f"(baseline {b_flat:.3f}x + {max_regress:.0%} allowed)")
+    b_mega = baseline.get("scaling_mega-campaign")
+    c_mega = candidate.get("scaling_mega-campaign")
+    if b_mega is not None:
+        if c_mega is None:
+            fails.append("candidate is missing the scaling_mega-campaign "
+                         "block (run benchmarks/campaign_replay.py --scaling "
+                         "--scenario mega-campaign --scaling-ns 20480)")
+        else:
+            bm_pts, cm_pts = points(b_mega), points(c_mega)
+            pin_points("scaling_mega-campaign", bm_pts, cm_pts)
+            mega = sorted(set(bm_pts) & set(cm_pts))
+            if mega and shared:
+                n, lo = mega[-1], shared[0]
+                b_norm = us_per_iter(bm_pts, n) / us_per_iter(b_pts, lo)
+                c_norm = us_per_iter(cm_pts, n) / us_per_iter(c_pts, lo)
+                limit = b_norm * (1.0 + max_regress)
+                if c_norm > limit:
+                    fails.append(
+                        f"mega-campaign us/iteration regressed: "
+                        f"{c_norm:.3f}x the same run's n={lo} paper-2022 "
+                        f"point (baseline {b_norm:.3f}x + "
+                        f"{max_regress:.0%} allowed)")
+    b_29 = baseline.get("profile_paper-29m-twice")
+    if b_29 is not None:
+        c_29 = candidate.get("profile_paper-29m-twice")
+        if c_29 is None:
+            fails.append("candidate is missing the profile_paper-29m-twice "
+                         "block (run benchmarks/campaign_replay.py --profile "
+                         "--scenario paper-29m-twice)")
+        else:
+            if b_29.get("iterations") != c_29.get("iterations"):
+                fails.append(
+                    f"paper-29m-twice determinism drift in iterations: "
+                    f"baseline {b_29.get('iterations')} vs candidate "
+                    f"{c_29.get('iterations')}")
+            wall = c_29.get("wall_s", float("inf"))
+            if wall > WALL_BUDGET_29M_S:
+                fails.append(
+                    f"the 29M-file replay blew its wall budget: "
+                    f"{wall:.1f}s > {WALL_BUDGET_29M_S:.0f}s — an O(files) "
+                    "path is back on the hot loop")
     return fails
 
 

@@ -370,6 +370,12 @@ class ReplicationScheduler:
                 slots -= 1
             for entry in deferred:
                 heapq.heappush(heap, entry)
+            if not heap:
+                # fully drained: drop the key so dispatch passes (and
+                # ``reprioritize``) stop iterating dead destinations —
+                # ``_queue_row`` recreates it on the next retryable row
+                del self._direct[dst]
+                self._direct_member.pop(dst, None)
         # freshly re-admitted quarantined rows come after the ordinary
         # eligibles, exactly where Figure 4's scan would see them
         for ds in self._readmit_quarantined(dst):
@@ -419,6 +425,12 @@ class ReplicationScheduler:
                         slots -= 1
                     for ds in deferred:
                         heapq.heappush(heap, ds)
+                    if not heap:
+                        # drained relay bucket: drop the (dst, donor) key —
+                        # ``_relay_add`` recreates it on the next candidate
+                        del self._relay[(dst, donor)]
+                if not tracked:
+                    del self._relay_donor[dst]
             # freshly re-admitted rows are scanned after the ordinary
             # eligibles (Figure 4 ordering; see _start_route)
             for ds in self._readmit_quarantined(dst):

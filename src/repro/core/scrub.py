@@ -121,8 +121,14 @@ class ScrubEngine:
         self._incarnation: Dict[Key, int] = {}   # SUCCEEDED landings per key
         self._at_risk: Dict[Key, float] = {}     # undetected bad blocks
         self._repairing: Dict[Key, float] = {}   # detected; re-transfer queued
-        # cached lognormal file partitions, built lazily per corrupt dataset
-        self._file_parts: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        # cached lognormal file partitions (size cumsums), built lazily per
+        # corrupt dataset.  The pool is bounded: repairs usually revisit the
+        # same few datasets, but a long campaign can eventually corrupt every
+        # dataset in a 29M-file catalog, and an unbounded cache would grow
+        # O(catalog files).  Entries beyond the budget are recomputed
+        # transiently — same draw, same result, O(one manifest) memory.
+        self._file_parts: Dict[str, np.ndarray] = {}
+        self._file_part_entries = 0
         # counters
         self.scans = 0                  # completed scrub passes
         self.scanned_replicas = 0
@@ -252,29 +258,50 @@ class ScrubEngine:
             # replica catalog marks it unserveable until it re-lands
             self.table.update_many(repairs)
 
+    # cached file-partition budget: total file entries held across all
+    # cached cumsums.  ~16 MB of int64 — O(active corruptions), not O(files).
+    FILE_PART_BUDGET = 2_000_000
+
+    def _file_csum(self, name: str, nf: int, nbytes: int) -> np.ndarray:
+        """The dataset's synthesized file-size cumsum (the
+        ``BundleComposer._file_cumsum`` treatment, keyed by name so it is
+        stable under catalog growth).  Cached under ``FILE_PART_BUDGET``;
+        oversized or overflow entries are recomputed per call."""
+        csum = self._file_parts.get(name)
+        if csum is not None:
+            return csum
+        rng = np.random.default_rng([self.injector.seed, stable_digest(name)])
+        w = rng.lognormal(mean=0.0, sigma=1.2, size=nf)
+        w /= w.sum()
+        sizes = np.floor(w * nbytes).astype(np.int64)
+        sizes[0] += nbytes - int(sizes.sum())
+        csum = np.cumsum(sizes)
+        if nf <= self.FILE_PART_BUDGET // 4:
+            if self._file_part_entries + nf > self.FILE_PART_BUDGET:
+                self._file_parts.clear()
+                self._file_part_entries = 0
+            self._file_parts[name] = csum
+            self._file_part_entries += nf
+        return csum
+
     def _localize(self, key: Key) -> Tuple[int, int]:
         """Corrupt (files, bytes) for a detected replica: searchsort the
         draw's byte offsets into the dataset's file-size cumsum — per-block
-        array ops, no per-file walk."""
+        array ops charged per run, with the per-file remainder recovered
+        exactly from adjacent cumsum entries.  No per-file walk, no
+        materialized per-file size array."""
         name, dest = key
         ds = self.catalog[name]
         offs = self.injector.latent_corrupt_offsets(
             name, dest, ds.bytes, self.spec.latent_per_pb,
             incarnation=self._incarnation[key])
-        sizes, csum = self._file_parts.get(name, (None, None))
-        if sizes is None:
-            nf = max(1, int(ds.files))
-            rng = np.random.default_rng(
-                [self.injector.seed, stable_digest(name)])
-            w = rng.lognormal(mean=0.0, sigma=1.2, size=nf)
-            w /= w.sum()
-            sizes = np.floor(w * ds.bytes).astype(np.int64)
-            sizes[0] += ds.bytes - int(sizes.sum())
-            csum = np.cumsum(sizes)
-            self._file_parts[name] = (sizes, csum)
+        csum = self._file_csum(name, max(1, int(ds.files)), ds.bytes)
         idx = np.unique(np.searchsorted(csum, offs, side="right"))
-        idx = idx[idx < len(sizes)]
-        return int(len(idx)), int(sizes[idx].sum())
+        idx = idx[idx < len(csum)]
+        if not len(idx):
+            return 0, 0
+        lo = np.where(idx > 0, csum[idx - 1], 0)
+        return int(len(idx)), int((csum[idx] - lo).sum())
 
     # ---------------------------------------------------------------- metrics
     def summary(self) -> dict:

@@ -4,11 +4,17 @@ One row per (dataset, source→destination) transfer.  The scheduler
 (`core.scheduler`) is a pure state machine over this table, exactly as the
 paper's replication tool tracked its 2×2291 transfers.
 
-sqlite stays the durable store, but every query is answered from a
-write-through in-memory row cache with status/route indexes, so the
-scheduler's per-step cost is proportional to the rows *matched* (live
-transfers), not to the catalog.  All mutations go through this class; they
-update the cache and the database inside the same lock.  Registered
+sqlite stays the durable store, but every query is answered from an
+in-memory row cache with status/route indexes, so the scheduler's per-step
+cost is proportional to the rows *matched* (live transfers), not to the
+catalog.  All mutations go through this class; they update the cache
+immediately, while the sqlite write for the hot-path ``update_many`` is
+*write-behind*: dirty keys are coalesced and flushed as full-row
+INSERT OR REPLACE before any durable copy (``dump``), connection close, or
+direct database read (``_select_db``) — the only points where sqlite
+contents are observable.  Because the cache mirrors the database row-for-row
+between flushes, replaying only each dirty row's *final* state reproduces
+exactly the database the per-update writes would have built.  Registered
 listeners observe every row transition, which lets the scheduler maintain
 its own incremental state (pending queues, relay donor sets) without
 re-scanning the table.
@@ -109,6 +115,9 @@ class TransferTable:
         self._succeeded: Dict[str, Set[str]] = {}   # destination -> datasets
         self._bytes_ok: Dict[str, int] = {}         # destination -> bytes
         self._listeners: List[Listener] = []
+        # keys whose cached row is newer than its sqlite row; flushed (sorted,
+        # one executemany) before dump/close/_select_db
+        self._dirty: Set[Key] = set()
         with self._lock:
             self._conn.executescript(_SCHEMA)
             self._conn.commit()
@@ -116,8 +125,10 @@ class TransferTable:
 
     def close(self) -> None:
         """Release the sqlite connection (a disk-backed table's file is then
-        safe to reopen or copy; every mutation was already committed)."""
+        safe to reopen or copy; pending write-behind rows are flushed
+        first)."""
         with self._lock:
+            self._flush_locked()
             self._conn.close()
 
     # --------------------------------------------------------- durable copies
@@ -130,6 +141,7 @@ class TransferTable:
         os.makedirs(parent, exist_ok=True)
         tmp = f"{path}.tmp"
         with self._lock:
+            self._flush_locked()
             dst = sqlite3.connect(tmp)
             try:
                 self._conn.backup(dst)
@@ -209,43 +221,47 @@ class TransferTable:
 
     def update_many(
             self, updates: Sequence[Tuple[str, str, dict]]) -> None:
-        """Apply many ``(dataset, destination, columns)`` updates in ONE
-        transaction.  Rows sharing a column set go through ``executemany``;
-        the scheduler's per-step poll and quarantine re-admission use this
-        instead of committing once per row."""
+        """Apply many ``(dataset, destination, columns)`` updates to the
+        cache, deferring the sqlite writes: each touched key is marked dirty
+        and its *final* row is flushed (one INSERT OR REPLACE executemany, in
+        sorted key order) the next time the database itself must be current
+        — a durable ``dump``, ``close``, or ``_select_db``.  An update whose
+        key matches no row is a no-op in cache and database alike, exactly
+        as the former per-update SQL was."""
         if not updates:
             return
-        groups: dict = {}
         events: List[Tuple[TransferRecord, Optional[Status], Optional[str]]] = []
         with self._lock:
             for dataset, destination, kw in updates:
-                kw = dict(kw)
-                if isinstance(kw.get("status"), Status):
-                    kw["status"] = kw["status"].value
-                groups.setdefault(tuple(kw), []).append(
-                    (*kw.values(), dataset, destination))
                 rec = self._rows.get((dataset, destination))
                 if rec is None:
                     continue                         # UPDATE matches no row
                 old_status, old_source = rec.status, rec.source
                 self._index_remove(rec)
                 for k, v in kw.items():
-                    setattr(rec, k, Status(v) if k == "status" else v)
+                    setattr(rec, k,
+                            v if k != "status" or isinstance(v, Status)
+                            else Status(v))
                 self._index_insert(rec)
+                self._dirty.add((dataset, destination))
                 events.append((rec, old_status, old_source))
-            for cols, rows in groups.items():
-                self._conn.executemany(
-                    "UPDATE transfer SET %s WHERE dataset=? AND destination=?"
-                    % ", ".join(f"{c}=?" for c in cols), rows)
-            self._conn.commit()
         for rec, old_status, old_source in events:
             self._notify(rec, old_status, old_source)
 
     # ---------------------------------------------------------------- queries
+    @staticmethod
+    def _copy(rec: TransferRecord) -> TransferRecord:
+        """Shallow field copy, several times faster than
+        ``dataclasses.replace`` (which re-runs the generated ``__init__``).
+        Equivalent because ``TransferRecord`` has no ``__post_init__``."""
+        new = TransferRecord.__new__(TransferRecord)
+        new.__dict__.update(rec.__dict__)
+        return new
+
     def get(self, dataset: str, destination: str) -> Optional[TransferRecord]:
         with self._lock:
             rec = self._rows.get((dataset, destination))
-            return dataclasses.replace(rec) if rec is not None else None
+            return self._copy(rec) if rec is not None else None
 
     def peek(self, dataset: str, destination: str) -> Optional[TransferRecord]:
         """The live cached row (no copy) — read-only, O(1).  The scheduler's
@@ -271,7 +287,7 @@ class TransferTable:
                 rec = self._rows[k]
                 if source is not None and rec.source != source:
                     continue
-                out.append(dataclasses.replace(rec))
+                out.append(self._copy(rec))
                 if limit and len(out) >= limit:
                     break
             return out
@@ -303,7 +319,7 @@ class TransferTable:
 
     def all(self) -> List[TransferRecord]:
         with self._lock:
-            return [dataclasses.replace(self._rows[k])
+            return [self._copy(self._rows[k])
                     for k in sorted(self._rows)]
 
     def done(self) -> bool:
@@ -316,6 +332,7 @@ class TransferTable:
         """Repopulate the row cache and every derived index/counter from the
         database (lock held).  Used at construction — including cold-opening
         a populated disk store — and after ``load`` replaces the db."""
+        self._dirty.clear()     # the database is the authority here
         self._rows.clear()
         self._by_status = {s: set() for s in Status}
         self._route_counts.clear()
@@ -355,9 +372,27 @@ class TransferTable:
             fn(rec, old_status, old_source)
 
     # ---------------------------------------------------------------- helpers
+    def _flush_locked(self) -> None:
+        """Write every dirty cached row to sqlite (caller holds the lock, or
+        is single-threaded): one INSERT OR REPLACE executemany in sorted key
+        order, one commit.  Restores the cache == database invariant."""
+        if not self._dirty:
+            return
+        rows = [self._row(self._rows[k])
+                for k in sorted(self._dirty) if k in self._rows]
+        self._dirty.clear()
+        if rows:
+            self._conn.executemany(
+                "INSERT OR REPLACE INTO transfer "
+                f"({','.join(_FIELDS)}) VALUES ({','.join('?' * len(_FIELDS))})",
+                rows)
+            self._conn.commit()
+
     def _select_db(self, where: str, args: tuple) -> List[TransferRecord]:
         """Read rows straight from sqlite (cache bootstrap + consistency
-        tests)."""
+        tests).  Flushes pending write-behind rows first, so the database
+        read is always current."""
+        self._flush_locked()
         cur = self._conn.execute(
             f"SELECT {','.join(_FIELDS)} FROM transfer {where}", args)
         rows = cur.fetchall()

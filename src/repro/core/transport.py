@@ -58,7 +58,7 @@ import numpy as np
 
 from repro.core.faults import (FaultInjector, FaultKind, Notifier, RetryPolicy)
 from repro.core.pause import DAY, PauseManager
-from repro.core.routes import Dataset, RouteGraph
+from repro.core.routes import Dataset, RouteGraph, fair_share_rates
 from repro.core.transfer_table import Status
 
 
@@ -194,6 +194,20 @@ class SimulatedTransport(Transport):
         # route, so they slow transfers out of a hot site without inventing
         # bandwidth between sites.
         self._read_load: Dict[str, Dict[str, int]] = {}
+        # fair-share memo: the last priced population (mover routes + reader
+        # pseudo-routes, with counts) and its rates dict.  Valid until any
+        # mover joins/leaves a route or reader load shifts — graph caps and
+        # knees are build-time constants, so population equality is the whole
+        # invalidation condition.  ``_pop_buf`` is the reusable scratch dict
+        # the per-tick population is counted into.
+        self._rates_pop: Optional[Dict[Tuple[str, str], int]] = None
+        self._rates: Dict[Tuple[str, str], float] = {}
+        self._pop_buf: Dict[Tuple[str, str], int] = {}
+        # interned pricing arrays per distinct active-route set: the routes'
+        # bandwidths / site caps / knees as preallocated float64 arrays plus
+        # int64 load buffers, so a cache miss prices EVERY route in one
+        # vectorized ``fair_share_rates`` call
+        self._route_arrays: Dict[Tuple[Tuple[str, str], ...], tuple] = {}
 
     @property
     def live_count(self) -> int:
@@ -308,16 +322,87 @@ class SimulatedTransport(Transport):
         next-event hints so the two can never diverge.  User reader streams
         are folded in as pseudo-routes ``(site, "__readers__")`` so they
         contend for the source read caps, but only real mover routes appear
-        in the returned dict."""
-        active_by_route: Dict[Tuple[str, str], int] = {}
+        in the returned dict.
+
+        O(movers) when the population is unchanged since the last pricing
+        (the same rates dict is returned — callers never mutate it); a
+        population change prices all routes in ONE vectorized
+        ``fair_share_rates`` call over interned per-route arrays, elementwise
+        bit-identical to the per-route scalar ``effective_rate`` path."""
+        pop = self._pop_buf
+        pop.clear()
         for x in movers:
             r = (x.source, x.destination)
-            active_by_route[r] = active_by_route.get(r, 0) + 1
-        routes = list(active_by_route)
+            pop[r] = pop.get(r, 0) + 1
+        routes = tuple(pop)
         for site, n in self._reader_streams().items():
-            active_by_route[(site, self._READERS)] = n
-        return {r: self.graph.effective_rate(r[0], r[1], active_by_route)
-                for r in routes}
+            pop[(site, self._READERS)] = n
+        if pop == self._rates_pop:
+            return self._rates
+        rates = self._price_routes(routes, pop)
+        # ping-pong the buffers: ``pop`` becomes the cached population, the
+        # previous cached dict (if any) becomes next call's scratch
+        self._pop_buf = self._rates_pop if self._rates_pop is not None else {}
+        self._rates_pop = pop
+        self._rates = rates
+        return rates
+
+    def _price_routes(self, routes: Tuple[Tuple[str, str], ...],
+                      pop: Dict[Tuple[str, str], int]
+                      ) -> Dict[Tuple[str, str], float]:
+        """Price every route in ``routes`` against the full population
+        ``pop`` (mover routes plus reader pseudo-routes) with one vectorized
+        ``fair_share_rates`` call.  Per distinct route set, the static
+        per-route inputs (bandwidth, site caps, contention knees) are
+        interned once into preallocated arrays; only the int64 load buffers
+        are refilled per call.  Routes absent from the graph price to 0.0
+        without touching site lookups, exactly like the scalar path."""
+        arrs = self._route_arrays.get(routes)
+        if arrs is None:
+            if len(self._route_arrays) > 64:    # combinatorial-blowup guard
+                self._route_arrays.clear()
+            graph = self.graph
+            idx = [i for i, r in enumerate(routes) if r in graph.routes]
+            m = len(idx)
+            route_bw = np.empty(m)
+            read_cap = np.empty(m)
+            write_cap = np.empty(m)
+            src_knee = np.empty(m)
+            dst_knee = np.empty(m)
+            inf = float("inf")
+            for j, i in enumerate(idx):
+                src, dst = routes[i]
+                s, d = graph.sites[src], graph.sites[dst]
+                route_bw[j] = graph.routes[(src, dst)].bandwidth
+                read_cap[j] = s.read_bw
+                write_cap[j] = d.write_bw
+                src_knee[j] = (inf if s.concurrency_knee is None
+                               else s.concurrency_knee)
+                dst_knee[j] = (inf if d.concurrency_knee is None
+                               else d.concurrency_knee)
+            arrs = (idx, route_bw, read_cap, write_cap, src_knee, dst_knee,
+                    np.empty(m, dtype=np.int64), np.empty(m, dtype=np.int64),
+                    np.empty(m, dtype=np.int64))
+            self._route_arrays[routes] = arrs
+        (idx, route_bw, read_cap, write_cap, src_knee, dst_knee,
+         n_route, src_load, dst_load) = arrs
+        sload: Dict[str, int] = {}
+        dload: Dict[str, int] = {}
+        for (s, d), n in pop.items():
+            sload[s] = sload.get(s, 0) + n
+            dload[d] = dload.get(d, 0) + n
+        for j, i in enumerate(idx):
+            src, dst = routes[i]
+            n_route[j] = pop[(src, dst)]
+            src_load[j] = sload[src]
+            dst_load[j] = dload[dst]
+        shares = fair_share_rates(route_bw, read_cap, write_cap,
+                                  n_route, src_load, dst_load,
+                                  src_knee, dst_knee)
+        rates = dict.fromkeys(routes, 0.0)
+        for j, i in enumerate(idx):
+            rates[routes[i]] = float(shares[j])
+        return rates
 
     def user_read_rate(self, site: str) -> float:
         """Fair-share bytes/s one user read stream gets from ``site``'s read

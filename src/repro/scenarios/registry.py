@@ -380,6 +380,30 @@ FEDERATION_PAPER_TWICE = FederationSpec(
                                   label="olcf")),
     shared_sites=("LLNL",))
 
+# the paper's headline regime end-to-end: all 28.9 M files moved TWICE, at
+# file granularity.  Both members run the mixed-bundle-paper control plane —
+# the composer synthesizes each dataset's file manifest and packs file runs
+# into size-balanced bundles — so the simulator's unit of work is the same
+# as the tool's (Globus tasks over file batches), not a per-dataset proxy.
+# This is the scale point the array-native hot path is gated on: the full
+# two-destination replay must stay O(active bundles) in memory and complete
+# in minutes on one core (see benchmarks/check_regression.py check_scaling).
+_PAPER_29M_POLICY = TransferPolicySpec(
+    bundling="balanced", granularity="file", controller="gradient",
+    target_files=500_000, target_bytes=100 * TB,
+    max_files=1_500_000, max_bytes=400 * TB,
+    balance_batch=4,
+    control_interval_s=12 * 3600.0)
+
+PAPER_29M_TWICE = dataclasses.replace(
+    FEDERATION_PAPER_TWICE.with_policy(_PAPER_29M_POLICY),
+    name="paper-29m-twice",
+    description="The catalog's 28.9 M files moved twice at file "
+                "granularity: the ALCF and OLCF pulls as overlapped "
+                "campaigns whose control planes pack file runs into "
+                "size-balanced bundles — the paper-scale stress point for "
+                "the O(active) hot path.")
+
 FEDERATION_PAPER_SERIAL = FederationSpec(
     name="federation-paper-serial",
     description="The serial comparator: the same two pulls back to back "
@@ -457,7 +481,7 @@ _REGISTRY: Dict[str, ScenarioSpec] = {
 
 _FEDERATION_REGISTRY: Dict[str, FederationSpec] = {
     s.name: s for s in (FEDERATION_PAPER_TWICE, FEDERATION_PAPER_SERIAL,
-                        FEDERATION_PAPER_AND_TOPUP)
+                        FEDERATION_PAPER_AND_TOPUP, PAPER_29M_TWICE)
 }
 
 # the crash-injection family: kill/resume meta-scenarios wrapping the specs

@@ -204,3 +204,70 @@ def test_streaming_checksum_any_chunking(data, small_chunks, seed):
         i += step
     s.update(b"")
     assert s.digest() == checksum_bytes_np(data)
+
+
+# ---------------------------------------------- batched fair-share pricer
+_FS_ROUTES = (("A", "B"), ("A", "C"), ("B", "C"), ("C", "B"),
+              ("B", "D"), ("D", "C"), ("D", "A"))   # D->A absent from graph
+
+
+def _fs_graph():
+    from repro.core.routes import Route, RouteGraph, Site
+    sites = [Site("A", read_bw=1.5 * GB, write_bw=1.5 * GB,
+                  concurrency_knee=3),
+             Site("B", read_bw=10 * GB, write_bw=10 * GB,
+                  concurrency_knee=6),
+             Site("C", read_bw=10 * GB, write_bw=10 * GB),
+             Site("D", read_bw=2 * GB, write_bw=2 * GB)]
+    routes = [Route(s, d, (1.3 + 0.7 * i) * GB)
+              for i, (s, d) in enumerate(_FS_ROUTES[:-1])]
+    return RouteGraph(sites, routes)
+
+
+@given(st.lists(st.integers(0, 5), min_size=len(_FS_ROUTES),
+                max_size=len(_FS_ROUTES)),
+       st.lists(st.integers(0, 8), min_size=4, max_size=4))
+@settings(max_examples=60, deadline=None)
+def test_batch_fair_share_matches_scalar_for_any_population(counts, readers):
+    """The one-shot array fair-share pricer must agree bit-for-bit with the
+    scalar ``effective_rate`` walk for ANY mover population — including
+    routes the graph doesn't know (0.0) and reader pseudo-routes from the
+    demand engine — and the allocation must conserve the per-route and
+    per-site read/write caps."""
+    graph = _fs_graph()
+    transport = SimulatedTransport(graph, SimClock(), PauseManager(),
+                                   FaultInjector(seed=0), Notifier())
+
+    class Mover:
+        def __init__(self, src, dst):
+            self.source, self.destination = src, dst
+
+    movers = [Mover(*r) for r, c in zip(_FS_ROUTES, counts)
+              for _ in range(c)]
+    transport.set_read_load("users", {
+        site: n for site, n in zip("ABCD", readers)})
+    rates = transport._route_rates(movers)
+
+    pop = {}
+    for x in movers:
+        r = (x.source, x.destination)
+        pop[r] = pop.get(r, 0) + 1
+    assert set(rates) == set(pop)
+    full = dict(pop)
+    for site, n in transport._reader_streams().items():
+        full[(site, "__readers__")] = n
+    for (src, dst), rate in rates.items():
+        assert rate == graph.effective_rate(src, dst, full)
+
+    eps = 1e-6
+    egress, ingress = {}, {}
+    for (src, dst), n in pop.items():
+        r = graph.route(src, dst)
+        assert rates[(src, dst)] * n <= (
+            (r.bandwidth if r else 0.0) * (1 + eps))
+        egress[src] = egress.get(src, 0.0) + rates[(src, dst)] * n
+        ingress[dst] = ingress.get(dst, 0.0) + rates[(src, dst)] * n
+    for site, tot in egress.items():
+        assert tot <= graph.sites[site].read_bw * (1 + eps)
+    for site, tot in ingress.items():
+        assert tot <= graph.sites[site].write_bw * (1 + eps)

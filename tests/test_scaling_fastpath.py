@@ -1,0 +1,350 @@
+"""Regression tests for the array-native hot path.
+
+Pins the fast paths against their scalar models the way the vectorized
+mover pool already is:
+
+  * the batched fair-share pricer (``SimulatedTransport._price_routes``)
+    against per-route scalar ``RouteGraph.effective_rate`` calls, including
+    reader pseudo-routes, contention knees, and routes absent from the
+    graph — plus cap conservation;
+  * the rates memo contract: an unchanged mover population returns the
+    cached dict without repricing, and any population or reader-load change
+    invalidates it (while the monkeypatch seam the federation bench relies
+    on keeps working);
+  * scheduler heap-key hygiene: drained per-destination dispatch heaps are
+    dropped, never left behind as empty lists for every dispatch pass to
+    iterate forever;
+  * scrub scan accounting at run granularity: the cumsum/searchsorted batch
+    cut and the corrupt-file localization must match a naive scalar
+    walk exactly (same pass count — hence same scan-completion days — same
+    scanned bytes, same corrupt files/bytes), with the file-partition cache
+    bounded so memory stays O(active), not O(catalog files);
+  * the ``paper-29m-twice`` registry scenario: buildable, deterministic.
+"""
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultInjector, Notifier, RetryPolicy, \
+    stable_digest
+from repro.core.pause import DAY, PauseManager
+from repro.core.routes import GB, Dataset, Route, RouteGraph, Site
+from repro.core.scrub import ScrubEngine, ScrubSpec
+from repro.core.transport import SimClock, SimulatedTransport
+from repro.scenarios.events import EngineStats, run_world
+from repro.scenarios.registry import get_scenario
+
+
+def _kneed_graph() -> RouteGraph:
+    """Four sites (two with contention knees) and a partial route mesh, so
+    batch pricing sees knees, shared sources, and missing routes."""
+    sites = [
+        Site("A", read_bw=1.5 * GB, write_bw=1.5 * GB, concurrency_knee=3),
+        Site("B", read_bw=10 * GB, write_bw=10 * GB, concurrency_knee=6),
+        Site("C", read_bw=10 * GB, write_bw=10 * GB),
+        Site("D", read_bw=2 * GB, write_bw=2 * GB),
+    ]
+    routes = [
+        Route("A", "B", 1.3 * GB), Route("A", "C", 1.3 * GB),
+        Route("B", "C", 3.4 * GB), Route("C", "B", 4.7 * GB),
+        Route("B", "D", 3.6 * GB), Route("D", "C", 4.0 * GB),
+    ]
+    return RouteGraph(sites, routes)
+
+
+def _transport(graph=None) -> SimulatedTransport:
+    graph = graph or _kneed_graph()
+    return SimulatedTransport(graph, SimClock(), PauseManager(),
+                              FaultInjector(seed=0), Notifier(),
+                              RetryPolicy())
+
+
+class _Mover:
+    def __init__(self, src, dst):
+        self.source, self.destination = src, dst
+
+
+def _random_population(rng, graph):
+    """A random mover population: mostly real routes, sometimes a route the
+    graph doesn't know (quarantine edge cases price to 0.0)."""
+    candidates = list(graph.routes) + [("D", "A")]
+    movers = []
+    for r in candidates:
+        movers.extend([_Mover(*r)] * int(rng.integers(0, 5)))
+    return movers
+
+
+# ------------------------------------------------- batch pricer vs scalar
+def test_batch_fair_share_matches_scalar_exactly():
+    graph = _kneed_graph()
+    tr = _transport(graph)
+    rng = np.random.default_rng(7)
+    for trial in range(200):
+        movers = _random_population(rng, graph)
+        if trial % 3 == 0:      # fold in reader pseudo-routes sometimes
+            tr.set_read_load("users", {
+                s: int(rng.integers(0, 9)) for s in ("A", "B", "C")})
+        else:
+            tr.set_read_load("users", {})
+        rates = tr._route_rates(movers)
+        pop = {}
+        for x in movers:
+            r = (x.source, x.destination)
+            pop[r] = pop.get(r, 0) + 1
+        assert set(rates) == set(pop)
+        full = dict(pop)
+        for site, n in tr._reader_streams().items():
+            full[(site, "__readers__")] = n
+        for (src, dst), rate in rates.items():
+            want = graph.effective_rate(src, dst, full)
+            assert rate == want, (src, dst, rate, want)   # bit-identical
+
+
+def test_batch_fair_share_conserves_caps():
+    graph = _kneed_graph()
+    tr = _transport(graph)
+    rng = np.random.default_rng(11)
+    eps = 1e-6
+    for _ in range(100):
+        movers = _random_population(rng, graph)
+        if not movers:
+            continue
+        rates = tr._route_rates(movers)
+        pop = {}
+        for x in movers:
+            r = (x.source, x.destination)
+            pop[r] = pop.get(r, 0) + 1
+        egress, ingress = {}, {}
+        for (src, dst), n in pop.items():
+            egress[src] = egress.get(src, 0.0) + rates[(src, dst)] * n
+            ingress[dst] = ingress.get(dst, 0.0) + rates[(src, dst)] * n
+            r = graph.route(src, dst)
+            cap = r.bandwidth if r is not None else 0.0
+            assert rates[(src, dst)] * n <= cap * (1 + eps)
+        for site, total in egress.items():
+            assert total <= graph.sites[site].read_bw * (1 + eps)
+        for site, total in ingress.items():
+            assert total <= graph.sites[site].write_bw * (1 + eps)
+
+
+def test_route_rates_memo_and_invalidation():
+    tr = _transport()
+    movers = [_Mover("A", "B"), _Mover("A", "B"), _Mover("B", "C")]
+    first = tr._route_rates(movers)
+    # unchanged population: the SAME dict comes back, unpriced
+    assert tr._route_rates(list(movers)) is first
+    # a mover joining a route invalidates the memo
+    second = tr._route_rates(movers + [_Mover("A", "C")])
+    assert second is not first
+    assert ("A", "C") in second
+    # reader load shifting invalidates it too, without new movers
+    tr.set_read_load("users", {"A": 4})
+    third = tr._route_rates(movers + [_Mover("A", "C")])
+    assert third is not second
+    assert third[("A", "B")] < second[("A", "B")]
+
+
+def test_route_rates_monkeypatch_seam_still_works():
+    """The federation bench wraps ``transport._route_rates`` with a closure
+    that calls the original; the memo lives inside the original method, so
+    the wrapper must keep observing every call."""
+    tr = _transport()
+    calls = []
+    orig = tr._route_rates
+
+    def wrapped(movers, _orig=orig):
+        rates = _orig(movers)
+        calls.append(len(movers))
+        return rates
+
+    tr._route_rates = wrapped
+    movers = [_Mover("A", "B")]
+    r1 = tr._route_rates(movers)
+    r2 = tr._route_rates(movers)
+    assert calls == [1, 1] and r1 is r2
+
+
+# ------------------------------------------------- scheduler heap hygiene
+def test_scheduler_drops_drained_heap_keys():
+    spec = get_scenario("paper-2022")
+    world = spec.build(seed=0, n_datasets=48)
+    run_world(world, stats=EngineStats())
+    sched = world.sched
+    # every queue key left behind must hold live work (a quarantined row can
+    # legitimately stay queued forever); what may never survive is an EMPTY
+    # heap — the leak that made dispatch passes iterate dead destinations
+    assert all(heap for heap in sched._direct.values())
+    assert all(heap for heap in sched._relay.values())
+    assert set(sched._direct_member) == set(sched._direct)
+    assert set(sched._relay_donor) <= {d for d, _ in sched._relay}
+
+
+def test_scheduler_key_count_tracks_live_destinations():
+    """Mid-campaign, the number of direct-dispatch keys never exceeds the
+    number of destinations that still have queued retryable work."""
+    spec = get_scenario("paper-2022")
+    world = spec.build(seed=0, n_datasets=48)
+    sched = world.sched
+    seen = []
+    orig = sched.step
+
+    def step(now, _orig=orig):
+        out = _orig(now)
+        seen.append((len(sched._direct), len(sched._direct_member)))
+        for dst, heap in sched._direct.items():
+            assert heap, f"empty heap left behind for {dst!r}"
+        return out
+
+    sched.step = step
+    run_world(world, stats=EngineStats())
+    assert seen
+    n_dest = len(spec.replicas)
+    assert max(n for n, _ in seen) <= n_dest
+    assert all(n == m for n, m in seen)   # member sets track the heaps
+
+
+# ---------------------------------------------- scrub scan accounting
+SCRUB_SHAPE = dict(n_datasets=32, scale=0.02)
+
+
+def _scrubbed_world():
+    world = get_scenario("scrub-and-repair").build(seed=0, **SCRUB_SHAPE)
+    run_world(world, stats=EngineStats())
+    return world
+
+
+def test_scrub_pass_cut_matches_scalar_model():
+    """The cumsum/searchsorted batch cut — hence the scan-completion days —
+    must match a naive scalar walk over the same rotating replica order."""
+    world = _scrubbed_world()
+    eng = world.scrub
+    spec = ScrubSpec(latent_per_pb=eng.spec.latent_per_pb,
+                     interval_days=4.0, scan_tb_per_pass=120.0)
+    fresh = ScrubEngine(spec, eng.catalog, world.table, eng.injector,
+                        eng.source, eng.replicas)
+    # pin the pure batch-cut arithmetic: with nothing at risk, no pass flips
+    # rows to FAILED, so the replica universe is stable across passes
+    fresh._at_risk.clear()
+    keys, sizes = fresh._scan_order()
+    n = len(keys)
+    assert n > 8, "scenario must land enough replicas to batch over"
+    budget = spec.scan_tb_per_pass * 1024 ** 4
+
+    # scalar model: accumulate replica sizes in the same rotating order,
+    # taking whole replicas while the budget holds (always at least one)
+    def scalar_pass(cursor):
+        total = k = 0
+        for i in range(n):
+            s = int(sizes[(cursor + i) % n])
+            if total + s <= budget:
+                total += s
+                k += 1
+            else:
+                break
+        if k == 0:
+            k, total = 1, int(sizes[cursor % n])
+        return k, total
+
+    cursor = 0
+    expect_passes = 0
+    expect_bytes = 0
+    covered = 0
+    while covered < n:
+        k, total = scalar_pass(cursor)
+        cursor = (cursor + k) % n
+        covered += k
+        expect_passes += 1
+        expect_bytes += total
+
+    now = fresh._now
+    passes = 0
+    while fresh.scanned_replicas < n:
+        fresh._run_pass(now)
+        passes += 1
+        assert passes <= n, "scan never completes"
+    assert passes == expect_passes
+    assert fresh.scanned_bytes == expect_bytes
+    # identical pass count at a fixed cadence == identical completion days
+    assert passes * spec.interval_days == expect_passes * spec.interval_days
+
+
+def test_scrub_localize_matches_scalar_file_walk():
+    world = _scrubbed_world()
+    eng = world.scrub
+    # replay a detection on a dataset that actually drew corruption
+    assert eng.detected > 0
+    name = sorted(eng.catalog)[3]
+    ds = eng.catalog[name]
+    nf = max(1, int(ds.files))
+    csum = eng._file_csum(name, nf, ds.bytes)
+
+    # scalar reference: full per-file partition, then a linear walk
+    rng = np.random.default_rng([eng.injector.seed, stable_digest(name)])
+    w = rng.lognormal(mean=0.0, sigma=1.2, size=nf)
+    w /= w.sum()
+    sizes = np.floor(w * ds.bytes).astype(np.int64)
+    sizes[0] += ds.bytes - int(sizes.sum())
+    assert int(csum[-1]) == ds.bytes
+    np.testing.assert_array_equal(np.asarray(csum), np.cumsum(sizes))
+
+    offs = np.asarray([0, 17, int(ds.bytes * 0.4), ds.bytes - 1],
+                      dtype=np.int64)
+    idx = np.unique(np.searchsorted(csum, offs, side="right"))
+    idx = idx[idx < len(csum)]
+    lo = np.where(idx > 0, csum[idx - 1], 0)
+    got = (int(len(idx)), int((csum[idx] - lo).sum()))
+
+    hit = set()
+    for off in offs.tolist():
+        acc = 0
+        for i, s in enumerate(sizes.tolist()):       # scalar file walk
+            acc += s
+            if off < acc:                # first file whose cumsum exceeds off
+                hit.add(i)
+                break
+    want = (len(hit), int(sum(int(sizes[i]) for i in hit)))
+    assert got == want
+
+
+def test_scrub_file_partition_cache_is_bounded():
+    world = _scrubbed_world()
+    eng = world.scrub
+    eng._file_parts.clear()
+    eng._file_part_entries = 0
+    eng.FILE_PART_BUDGET = 100          # shrink the budget for the test
+    names = sorted(eng.catalog)
+    # an oversized manifest is computed transiently, never cached
+    big = eng._file_csum(names[0], 80, eng.catalog[names[0]].bytes)
+    assert len(big) == 80 and not eng._file_parts
+    # small manifests are cached until the budget would overflow...
+    eng._file_csum(names[1], 20, eng.catalog[names[1]].bytes)
+    eng._file_csum(names[2], 20, eng.catalog[names[2]].bytes)
+    assert set(eng._file_parts) == {names[1], names[2]}
+    # ...then the pool is recycled rather than growing without bound
+    for name in names[3:8]:
+        eng._file_csum(name, 20, eng.catalog[name].bytes)
+    assert eng._file_part_entries <= 100
+    assert len(eng._file_parts) <= 5
+    # recomputation after eviction is bit-identical to the cached value
+    again = eng._file_csum(names[1], 20, eng.catalog[names[1]].bytes)
+    rng = np.random.default_rng([eng.injector.seed,
+                                 stable_digest(names[1])])
+    w = rng.lognormal(mean=0.0, sigma=1.2, size=20)
+    w /= w.sum()
+    sizes = np.floor(w * eng.catalog[names[1]].bytes).astype(np.int64)
+    sizes[0] += eng.catalog[names[1]].bytes - int(sizes.sum())
+    np.testing.assert_array_equal(np.asarray(again), np.cumsum(sizes))
+
+
+# --------------------------------------------------- paper-29m-twice spec
+def test_paper_29m_twice_registered_and_deterministic():
+    spec = get_scenario("paper-29m-twice")
+    assert spec.policy is not None and spec.policy.granularity == "file"
+    digests = []
+    for _ in range(2):
+        world = spec.build(seed=0, n_datasets=48, scale=0.02)
+        stats = EngineStats()
+        rep = run_world(world, stats=stats)
+        digests.append((stats.iterations, rep.span_days, tuple(
+            (label, m.faults_total, tuple(sorted(m.bytes_at.items())))
+            for label, m in sorted(rep.members.items()))))
+    assert digests[0] == digests[1]
