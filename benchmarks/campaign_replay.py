@@ -50,6 +50,11 @@ its scalar trajectory bit-for-bit, recorded under the ``ensemble`` key of
 and records the integrity summaries plus the ends-clean / repairs-converge
 / exposure / repair-tax verdicts under the ``integrity`` key of
 ``BENCH_scenarios.json``.
+
+``--obs-bench`` gates the flight recorder: a paper-2022 replay with trace +
+metrics on must stay within 1.10x the obs-off wall (same-process
+min-of-repeats) with a bit-identical trajectory tuple, recorded under the
+``obs`` key of ``BENCH_scenarios.json``.
 """
 from __future__ import annotations
 
@@ -58,6 +63,7 @@ import json
 import time
 
 from repro.core.campaign import CampaignConfig, run_campaign
+from repro.obs.profile import PhaseProfiler
 
 SCALING_NS = (48, 512, 2291, 8192, 20480)
 
@@ -580,47 +586,9 @@ def ensemble_bench(n_lanes: int = 256, scale: float = 0.002,
     return doc
 
 
-class _PhaseProfiler:
-    """Per-phase wall-time buckets via temporary class-method wrappers.
-
-    Exclusive-time accounting: a stack tracks the active bucket, and time
-    spent in a nested instrumented call (``TransferTable`` work inside
-    ``ReplicationScheduler.step``, say) is charged to the inner bucket and
-    subtracted from the outer one, so the buckets sum to at most the run's
-    wall clock and never double-count.  Wrapping happens at class level so
-    federation members (N schedulers over one transport) are all captured.
-    Instrumentation only *times* the original calls — trajectories are
-    untouched — but the measured run is slower than a bare one, so profile
-    numbers are recorded alongside, never instead of, the scaling walls.
-    """
-
-    def __init__(self):
-        self.buckets = {}
-        self._stack = []
-        self._patched = []
-
-    def wrap(self, cls, name: str, bucket: str) -> None:
-        orig = getattr(cls, name)
-
-        def timed(s, *a, _orig=orig, _b=bucket, **kw):
-            t0 = time.perf_counter()
-            self._stack.append([_b, 0.0])
-            try:
-                return _orig(s, *a, **kw)
-            finally:
-                dt = time.perf_counter() - t0
-                b, child = self._stack.pop()
-                self.buckets[b] = self.buckets.get(b, 0.0) + (dt - child)
-                if self._stack:
-                    self._stack[-1][1] += dt
-
-        setattr(cls, name, timed)
-        self._patched.append((cls, name, orig))
-
-    def restore(self) -> None:
-        for cls, name, orig in self._patched:
-            setattr(cls, name, orig)
-        self._patched.clear()
+# promoted to src/repro/obs/profile.py; the bench keeps this alias so any
+# external caller of benchmarks.campaign_replay._PhaseProfiler still works
+_PhaseProfiler = PhaseProfiler
 
 
 def profile_run(scenario: str = "paper-2022", n_datasets: int = None,
@@ -628,44 +596,80 @@ def profile_run(scenario: str = "paper-2022", n_datasets: int = None,
     """One instrumented event-engine replay split into per-phase buckets:
     sched (dispatch/poll), transport (tick + next-event hints), table
     (row/index churn, charged exclusively), control/demand/scrub (the
-    opt-in planes), and driver (the run_world loop remainder)."""
-    from repro.control.plane import ControlPlane
-    from repro.core.scheduler import ReplicationScheduler
-    from repro.core.scrub import ScrubEngine
-    from repro.core.transfer_table import TransferTable
-    from repro.core.transport import SimulatedTransport
-    from repro.demand.engine import DemandEngine
+    opt-in planes), and driver (the run_world loop remainder).  Thin
+    wrapper over ``repro.obs.profile.PhaseProfiler``."""
     from repro.scenarios.events import EngineStats, run_scenario
 
-    prof = _PhaseProfiler()
-    prof.wrap(ReplicationScheduler, "step", "sched")
-    prof.wrap(SimulatedTransport, "tick", "transport")
-    prof.wrap(SimulatedTransport, "next_event_hint", "transport")
-    prof.wrap(TransferTable, "update_many", "table")
-    prof.wrap(TransferTable, "by_status", "table")
-    prof.wrap(ControlPlane, "step", "control")
-    prof.wrap(DemandEngine, "step", "demand")
-    prof.wrap(ScrubEngine, "step", "scrub")
     stats = EngineStats()
     t0 = time.time()
-    try:
+    with PhaseProfiler() as prof:
+        prof.instrument_standard()
         run_scenario(scenario, engine="events", scale=scale, seed=seed,
                      n_datasets=n_datasets, stats=stats)
-    finally:
-        prof.restore()
     wall = time.time() - t0
-    phases = {b: round(t, 3) for b, t in sorted(prof.buckets.items())}
-    phases["driver"] = round(max(0.0, wall - sum(prof.buckets.values())), 3)
+    doc = prof.report(wall)
     return {
         "scenario": scenario,
         "n_datasets": n_datasets,
         "seed": seed,
-        "wall_s": round(wall, 3),
+        "wall_s": doc["wall_s"],
         "iterations": stats.iterations,
-        "phases_s": phases,
-        "phases_pct": {b: round(100.0 * t / max(wall, 1e-9), 1)
-                       for b, t in phases.items()},
+        "phases_s": doc["phases_s"],
+        "phases_pct": doc["phases_pct"],
     }
+
+
+def obs_bench(n_datasets: int = 2291, seed: int = 0, scale: float = 1.0,
+              repeats: int = 3, max_overhead: float = 1.10) -> dict:
+    """The flight-recorder overhead + determinism gate: paper-2022 replayed
+    obs-off and obs-on (trace + metrics, in-memory — no sink I/O in the
+    measured loop), min-of-repeats walls, and the trajectory tuples that
+    must match bit-exactly.  Both arms run in this same process, so the
+    ratio cancels machine speed and the gate travels."""
+    from repro.core.snapshot import trajectory_summary
+    from repro.obs.spec import FULL_OBS
+    from repro.scenarios.events import EngineStats, run_world
+    from repro.scenarios.registry import get_scenario
+
+    spec_off = get_scenario("paper-2022")
+    spec_on = spec_off.with_obs(FULL_OBS)
+    arms = {}
+    # interleave the arms so clock drift (thermal, background load) hits
+    # both equally instead of biasing whichever ran second
+    for _ in range(repeats):
+        for arm, spec in (("obs_off", spec_off), ("obs_on", spec_on)):
+            world = spec.build(scale=scale, seed=seed, n_datasets=n_datasets)
+            stats = EngineStats()
+            t0 = time.perf_counter()
+            rep = run_world(world, engine="events", stats=stats)
+            wall = time.perf_counter() - t0
+            traj = trajectory_summary(rep, stats, world.table)
+            best = arms.get(arm)
+            if best is None or wall < best["wall_s"]:
+                arms[arm] = {"wall_s": wall, "trajectory": traj}
+    for best in arms.values():
+        best["wall_s"] = round(best["wall_s"], 3)
+    ratio = arms["obs_on"]["wall_s"] / max(arms["obs_off"]["wall_s"], 1e-9)
+    identical = arms["obs_on"]["trajectory"] == arms["obs_off"]["trajectory"]
+    doc = {
+        "scenario": "paper-2022",
+        "n_datasets": n_datasets,
+        "seed": seed,
+        "scale": scale,
+        "repeats": repeats,
+        "obs_off": arms["obs_off"],
+        "obs_on": arms["obs_on"],
+        "overhead_ratio": round(ratio, 3),
+        "max_overhead": max_overhead,
+        "obs_identical": identical,
+        "gate_ok": identical and ratio <= max_overhead,
+    }
+    print(f"obs paper-2022 n={n_datasets}: off={arms['obs_off']['wall_s']:.3f}s "
+          f"on={arms['obs_on']['wall_s']:.3f}s -> {ratio:.3f}x "
+          + ("OK" if doc["gate_ok"]
+             else f"!! gate FAILED (need <={max_overhead}x, "
+                  f"identical={identical})"))
+    return doc
 
 
 def scaling(ns=SCALING_NS, scenario: str = "paper-2022", seed: int = 0) -> dict:
@@ -718,6 +722,10 @@ def main():
                          "scaling (N=256 lockstep vs N sequential scalar "
                          "replays, bit-identity enforced on sampled lanes) "
                          "and record it in BENCH_scenarios.json")
+    ap.add_argument("--obs-bench", action="store_true",
+                    help="gate the flight recorder: obs-on paper-2022 "
+                         "replay <= 1.10x obs-off wall with a bit-identical "
+                         "trajectory, recorded in BENCH_scenarios.json")
     ap.add_argument("--ensemble-lanes", type=int, default=256,
                     help="lane count for --ensemble-bench")
     ap.add_argument("--min-speedup", type=float, default=20.0,
@@ -756,6 +764,13 @@ def main():
                else f"profile_{args.scenario}")
         emit_bench([], path=args.bench_out, extra={key: doc})
         print(json.dumps(doc, indent=2))
+        return
+    if args.obs_bench:
+        doc = obs_bench(n_datasets=args.datasets, scale=args.scale)
+        emit_bench([], path=args.bench_out, extra={"obs": doc})
+        print(json.dumps(doc, indent=2))
+        if not doc["gate_ok"]:
+            raise SystemExit(1)
         return
     if args.ensemble_bench:
         doc = ensemble_bench(n_lanes=args.ensemble_lanes,

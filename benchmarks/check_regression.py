@@ -69,6 +69,7 @@ def check(baseline: dict, candidate: dict, max_regress: float) -> list:
     fails.extend(check_policy(baseline, candidate))
     fails.extend(check_demand(baseline, candidate))
     fails.extend(check_integrity(baseline, candidate))
+    fails.extend(check_obs(baseline, candidate))
     fails.extend(check_scaling(baseline, candidate, max_regress))
     return fails
 
@@ -393,6 +394,50 @@ def check_integrity(baseline: dict, candidate: dict) -> list:
                 f"integrity verdict {verdict} failed: {msg} "
                 f"(scrub_repair sim_days="
                 f"{sr.get('sim_days')}, integrity={sr.get('integrity')})")
+    return fails
+
+
+def check_obs(baseline: dict, candidate: dict) -> list:
+    """Flight-recorder gate: the obs-on paper-2022 replay must stay within
+    the bench's own overhead budget (wall ratio obs_on/obs_off, measured
+    in-process so machine speed cancels), the obs-on and obs-off trajectory
+    tuples must be identical to each other (the bit-identity contract), and
+    both arms must reproduce the baseline's trajectory exactly."""
+    fails = []
+    base = baseline.get("obs")
+    if base is None:
+        return []               # pre-obs baseline: nothing to gate
+    cand = candidate.get("obs")
+    if cand is None:
+        return ["candidate is missing the obs block "
+                "(run benchmarks/campaign_replay.py --obs-bench)"]
+    if base.get("n_datasets") != cand.get("n_datasets") or \
+            base.get("seed") != cand.get("seed") or \
+            base.get("scale") != cand.get("scale"):
+        return [f"obs benchmark shapes differ: baseline "
+                f"n={base.get('n_datasets')}/seed={base.get('seed')}"
+                f"/scale={base.get('scale')} vs candidate "
+                f"n={cand.get('n_datasets')}/seed={cand.get('seed')}"
+                f"/scale={cand.get('scale')}"]
+    if not cand.get("obs_identical"):
+        fails.append(
+            "obs bit-identity contract broken: the obs-on trajectory "
+            f"differs from obs-off (on={cand.get('obs_on', {}).get('trajectory')} "
+            f"vs off={cand.get('obs_off', {}).get('trajectory')})")
+    for arm in ("obs_off", "obs_on"):
+        b_t = base.get(arm, {}).get("trajectory")
+        c_t = cand.get(arm, {}).get("trajectory")
+        if b_t != c_t:
+            fails.append(f"obs determinism drift in {arm}: baseline "
+                         f"{b_t} vs candidate {c_t}")
+    limit = cand.get("max_overhead", base.get("max_overhead", 1.10))
+    ratio = cand.get("overhead_ratio")
+    if ratio is None or ratio > limit:
+        fails.append(
+            f"obs overhead gate failed: obs-on/obs-off wall ratio "
+            f"{ratio} > {limit} "
+            f"(on={cand.get('obs_on', {}).get('wall_s')}s vs "
+            f"off={cand.get('obs_off', {}).get('wall_s')}s)")
     return fails
 
 

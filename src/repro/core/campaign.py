@@ -42,6 +42,9 @@ class CampaignConfig:
     human_fix_days: float = 3.0          # time for admins to fix permissions
     scale: float = 1.0                   # 1.0 = full 7.3 PB; tests use less
     task_setup_s: float = 0.0            # fixed dispatch cost per transfer task
+    # retention horizon (days) for the transport's per-(day, route) flow
+    # telemetry; None keeps the whole campaign (seed behaviour)
+    flow_horizon_days: Optional[float] = None
 
 
 @dataclass
@@ -159,7 +162,8 @@ def build_campaign(cfg: CampaignConfig, *,
     if transport is None:
         transport = SimulatedTransport(graph, clock, pause, injector,
                                        notifier, retry,
-                                       task_setup_s=cfg.task_setup_s)
+                                       task_setup_s=cfg.task_setup_s,
+                                       flow_horizon_days=cfg.flow_horizon_days)
     if table is None:
         table = TransferTable()
     sched = ReplicationScheduler(

@@ -122,6 +122,8 @@ def render_federation_text(world, now: float) -> str:
             lines.append(render_demand_text(rt.demand, now))
         if rt.scrub is not None:
             lines.append(render_scrub_text(rt.scrub, now))
+        if rt.obs is not None:
+            lines.append(render_obs_text(rt.obs, now))
     return "\n".join(lines)
 
 
@@ -258,6 +260,43 @@ def render_scrub_text(scrub, now: float) -> str:
     return "\n".join(lines)
 
 
+# ------------------------------------------------------ flight-recorder view
+def obs_rows(obs) -> List[Dict]:
+    """The flight recorder's own health as dashboard rows: trace volume and
+    ring retention, sample count, and the latest metrics sample headline."""
+    rows: List[Dict] = []
+    if obs.trace is not None:
+        t = obs.trace.summary()
+        rows.append(dict(t, campaign=obs.label, kind="trace"))
+    if obs.metrics is not None:
+        row = {"campaign": obs.label, "kind": "metrics",
+               "samples": len(obs.samples)}
+        if obs.samples:
+            last = obs.samples[-1]
+            row["t_day"] = last["t_day"]
+            row["queue_depth"] = last["queue_depth"]
+            row["backoff_depth"] = last["backoff_depth"]
+        rows.append(row)
+    return rows
+
+
+def render_obs_text(obs, now: float) -> str:
+    """The flight-recorder view as text: one line per stream."""
+    lines = [f"--- obs [{obs.label}] @ t={now/86400:.2f} d ---"]
+    for r in obs_rows(obs):
+        if r["kind"] == "trace":
+            lines.append(
+                f"trace events={r['events']:,} retained={r['retained']:,} "
+                f"dropped={r['dropped']:,} "
+                f"ring={_fmt_bytes(r['ring_bytes'])}/"
+                f"{_fmt_bytes(r['budget_bytes'])}")
+        else:
+            at = (f" last@d{r['t_day']:.2f} queue={r['queue_depth']} "
+                  f"backoff={r['backoff_depth']}" if "t_day" in r else "")
+            lines.append(f"metrics samples={r['samples']}{at}")
+    return "\n".join(lines)
+
+
 # ----------------------------------------------------------- detailed views
 def snapshot(table: TransferTable, destinations: List[str],
              total_bytes: int, now: float, n_recent: int = 4,
@@ -279,14 +318,25 @@ def snapshot(table: TransferTable, destinations: List[str],
     return out
 
 
-def _row(r: TransferRecord) -> Dict:
+def row_dict(r: TransferRecord) -> Dict:
+    """One transfer row as a JSON-clean dict — the single builder shared by
+    ``snapshot``/``render_json`` and the flight recorder's NDJSON sink.
+    Non-finite rates (a resumed row's first tick) become None: the output
+    must survive ``json.dumps(allow_nan=False)`` byte-stably."""
+    rate = r.rate
+    if rate != rate or rate in (float("inf"), float("-inf")):
+        rate = None
     return {
         "dataset": r.dataset, "from": r.source, "requested": r.requested,
         "completed": r.completed, "status": r.status.value,
         "directories": r.directories, "files": r.files,
         "bytes_transferred": r.bytes_transferred, "faults": r.faults,
-        "rate": r.rate,
+        "rate": rate,
     }
+
+
+# backwards-compatible alias (the pre-obs private name)
+_row = row_dict
 
 
 def render_text(table: TransferTable, destinations: List[str],
@@ -309,7 +359,7 @@ def render_text(table: TransferTable, destinations: List[str],
                 f"{i:>3} {r['dataset'][:54]:54} {r['from']:5} "
                 f"{r['status']:12} {r['files']:>9} "
                 f"{_fmt_bytes(r['bytes_transferred']):>10} {r['faults']:>6} "
-                f"{_fmt_rate(r['rate']):>12}")
+                f"{_fmt_rate(r['rate'] or 0.0):>12}")
     return "\n".join(lines)
 
 

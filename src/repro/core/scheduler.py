@@ -507,3 +507,14 @@ class ReplicationScheduler:
                 continue
             return t
         return float("inf")
+
+    # ------------------------------------------------------- observability
+    def backoff_depth(self) -> int:
+        """Failed transfers currently waiting out a retry backoff (read-only
+        O(1) — the flight recorder samples this every metrics interval)."""
+        return len(self._backoff_until)
+
+    def queue_depth(self) -> int:
+        """Datasets still queued for direct dispatch across destinations
+        (read-only; the flight recorder samples this on cadence)."""
+        return sum(len(h) for h in self._direct.values())

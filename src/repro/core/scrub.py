@@ -138,6 +138,9 @@ class ScrubEngine:
         self.corrupt_files = 0          # corrupt files localized, cumulative
         self.corrupt_bytes = 0          # their sizes, cumulative
         self._exposure_days = 0.0       # closed exposure (repaired replicas)
+        # flight-recorder seam: called after each scrub pass with (now,
+        # pass stats); plain attribute, None compiles to no observation
+        self.obs_hook = None
         table.add_listener(self._on_row)
         # adopt rows that predate this engine (checkpoint resume: the
         # restored table already carries the campaign's history; a following
@@ -227,6 +230,9 @@ class ScrubEngine:
         keys, sizes = self._scan_order()
         n = len(keys)
         if n == 0:
+            if self.obs_hook is not None:
+                self.obs_hook(now, {"pass": self.scans, "scanned": 0,
+                                    "detected": 0})
             return
         start = self._cursor % n
         order = (start + np.arange(n)) % n
@@ -257,6 +263,10 @@ class ScrubEngine:
             # planner stops using the corrupt copy as a donor, and the
             # replica catalog marks it unserveable until it re-lands
             self.table.update_many(repairs)
+        if self.obs_hook is not None:
+            self.obs_hook(now, {"pass": self.scans, "scanned": k,
+                                "detected": len(repairs),
+                                "at_risk": len(self._at_risk)})
 
     # cached file-partition budget: total file entries held across all
     # cached cumsums.  ~16 MB of int64 — O(active corruptions), not O(files).

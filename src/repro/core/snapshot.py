@@ -48,6 +48,10 @@ from repro.core.transfer_table import Status, TransferTable
 # v4: adds the scrub block (scan anchor/cursor, per-replica integrity ledger
 # with incarnation counts, data-at-risk counters), so a kill mid-scrub
 # resumes the scrub/repair campaign digest-identically
+#
+# The flight recorder (repro.obs) is deliberately NOT snapshotted: observers
+# are rebuilt fresh on resume, and snapshot bytes are identical with obs on
+# or off — part of the obs bit-identity contract.
 SNAPSHOT_VERSION = 4
 FEDERATION_SNAPSHOT_VERSION = 4
 FEDERATION_KIND = "federation"

@@ -301,6 +301,14 @@ class TransferTable:
         with self._lock:
             return sum(len(self._by_status.get(s, ())) for s in statuses)
 
+    def status_counts(self) -> Dict[str, int]:
+        """Row count per status, keyed by status value in enum order —
+        served from the status index (O(#statuses), the flight recorder
+        samples this every metrics interval)."""
+        with self._lock:
+            return {s.value: len(self._by_status.get(s, ()))
+                    for s in Status}
+
     def succeeded_datasets(self, destination: str) -> List[str]:
         with self._lock:
             return list(self._succeeded.get(destination, ()))

@@ -164,7 +164,8 @@ class SimulatedTransport(Transport):
                  notifier: Notifier,
                  retry: RetryPolicy = RetryPolicy(),
                  vectorized: bool = True,
-                 task_setup_s: float = 0.0):
+                 task_setup_s: float = 0.0,
+                 flow_horizon_days: Optional[float] = None):
         self.graph = graph
         self.clock = clock
         self.pause = pause
@@ -184,6 +185,12 @@ class SimulatedTransport(Transport):
         # telemetry, bounded: per-(day, route) byte totals instead of one
         # tuple per mover per tick
         self.flow_totals: Dict[Tuple[int, Tuple[str, str]], float] = {}
+        # optional retention horizon for flow_totals: buckets older than
+        # this many days are pruned at day crossings, so a 29M-file
+        # campaign's telemetry stays O(routes · horizon) instead of
+        # O(routes · campaign days).  None = keep the whole campaign.
+        self.flow_horizon_days = flow_horizon_days
+        self._flow_pruned_day = -1
         # cumulative per-route counters for the control plane's tuners:
         # bytes moved and transient/persistent faults observed, O(routes)
         self._route_bytes: Dict[Tuple[str, str], float] = {}
@@ -279,6 +286,15 @@ class SimulatedTransport(Transport):
         return {r: (self._route_bytes.get(r, 0.0),
                     self._route_faults.get(r, 0))
                 for r in routes}
+
+    def live_route_counts(self) -> Dict[str, int]:
+        """In-flight transfers per route ("SRC->DST", sorted) — the flight
+        recorder's fair-share occupancy gauge.  Read-only, O(live)."""
+        counts: Dict[str, int] = {}
+        for x in self._live.values():
+            key = f"{x.source}->{x.destination}"
+            counts[key] = counts.get(key, 0) + 1
+        return {k: counts[k] for k in sorted(counts)}
 
     def _pause_memo(self, now: float) -> Callable[[str], bool]:
         """Per-tick memoized site-pause lookup (two sites per transfer, but
@@ -430,6 +446,13 @@ class SimulatedTransport(Transport):
         if dt <= 0:
             return
         now = self.clock.now
+        if self.flow_horizon_days is not None:
+            day = int(now // DAY)
+            if day > self._flow_pruned_day:
+                self._flow_pruned_day = day
+                floor = day - self.flow_horizon_days
+                for key in [k for k in self.flow_totals if k[0] < floor]:
+                    del self.flow_totals[key]
         paused = self._pause_memo(now)
         movers: List[_SimXfer] = []
         by_src: Dict[str, List[_SimXfer]] = {}

@@ -86,6 +86,9 @@ class DemandEngine:
         self.warmups = 0
         self._daily: Dict[int, List[int]] = {}        # day -> [requests, hits]
         self._latency_hist: Dict[int, int] = {}
+        # flight-recorder seam: called after each admission wave with (t1,
+        # wave stats); plain attribute, None compiles to no observation
+        self.obs_hook = None
         if spec.prioritize:
             sched.set_priority(self.workload.rank_of)
 
@@ -191,6 +194,13 @@ class DemandEngine:
             if streams > 0:
                 load[site] = streams
         self.transport.set_read_load(self.label, load)
+        if self.obs_hook is not None:
+            self.obs_hook(t1, {"wave": self.waves,
+                               "requests": self.requests_total,
+                               "hits": self.hits_total,
+                               "cache_hits": self.cache_hits_total,
+                               "source_reads": self.source_reads_total,
+                               "warmed": warmed})
 
     # -------------------------------------------------------------- metrics
     def latency_quantile(self, q: float) -> float:

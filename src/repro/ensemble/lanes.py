@@ -105,6 +105,8 @@ def lane_capable(spec) -> Tuple[bool, str]:
         return False, "demand engine is event-driven"
     if spec.scrub.enabled:
         return False, "scrub engine is event-driven"
+    if spec.obs.enabled:
+        return False, "flight recorder traces scalar row transitions"
     if spec.top_ups:
         return False, "incremental top-ups mutate the catalog mid-run"
     return True, ""

@@ -73,6 +73,8 @@ def _next_event_dt(shared, runtimes, members, finished_at,
             cand.append(rt.demand.next_wave(now) - now)
         if rt.scrub is not None:
             cand.append(rt.scrub.next_action(now) - now)
+        if rt.obs is not None:
+            cand.append(rt.obs.next_action(now) - now)
         for t in members[i].fix_at.values():
             if t > now:
                 cand.append(t - now)
@@ -186,6 +188,8 @@ def run_world(world, engine: str = "events",
         runtimes[i].sched.teardown()
         if runtimes[i].demand is not None:
             runtimes[i].demand.teardown()
+        if runtimes[i].obs is not None:
+            runtimes[i].obs.finalize(clock.now)
 
     while clock.now < horizon:
         # members past their own deadline time out and hand their capacity
@@ -214,6 +218,10 @@ def run_world(world, engine: str = "events",
             if runtimes[i].scrub is not None:
                 runtimes[i].scrub.step(clock.now)
             runtimes[i].sched.step(clock.now)
+            # observe last: the flight recorder samples the state this
+            # pass produced, and never feeds anything back
+            if runtimes[i].obs is not None:
+                runtimes[i].obs.step(clock.now)
         for i in active:
             rt, ls = runtimes[i], members[i]
             apply_human_fixes(rt.notifier, ls.fix_at, clock.now,

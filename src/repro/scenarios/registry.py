@@ -19,6 +19,7 @@ from repro.ensemble.spec import AxisSpec, EnsembleSpec
 from repro.scenarios.crash_resume import (CRASH_RESUME_SCENARIOS,
                                           CrashResumeSpec)
 from repro.demand.spec import DemandSpec
+from repro.obs.spec import ObsSpec
 from repro.scenarios.spec import (CatalogSpec, FaultProfileSpec,
                                   FederationMemberSpec, FederationSpec,
                                   OutageSpec, RouteSpec, ScenarioSpec,
@@ -95,6 +96,25 @@ FAULT_STORM = ScenarioSpec(
     outages=_PAPER_OUTAGES,
     faults=FaultProfileSpec(transient_per_tb=3.0, fragility_tail=1.8,
                             max_retries=10, backoff_s=1800.0))
+
+HARSH_FAULTS = ScenarioSpec(
+    name="harsh-faults",
+    description="The fault-storm profile compounded by unplanned multi-day "
+                "DTN outages, with the flight recorder on: the post-mortem "
+                "walkthrough scenario (EXPERIMENTS.md) — read the outage "
+                "timeline back out of the recorded stream.",
+    source="LLNL", replicas=("ALCF", "OLCF"),
+    sites=(_LLNL, _ALCF, _OLCF), routes=_PAPER_ROUTES,
+    outages=_PAPER_OUTAGES + (
+        # unplanned mid-campaign DTN failures on top of the Fig.-5 calendar
+        OutageSpec("ALCF", start_day=9.0, duration_h=36.0, planned=False),
+        OutageSpec("OLCF", start_day=21.0, duration_h=60.0, planned=False),
+        OutageSpec("ALCF", start_day=33.5, duration_h=6.0, weekly=True),
+    ),
+    faults=FaultProfileSpec(transient_per_tb=3.0, fragility_tail=1.8,
+                            max_retries=10, backoff_s=1800.0),
+    obs=ObsSpec(trace=True, metrics=True),
+    max_days=400.0)
 
 FLAKY_NETWORK = ScenarioSpec(
     name="flaky-network",
@@ -472,6 +492,7 @@ _ENSEMBLE_REGISTRY: Dict[str, EnsembleSpec] = {
 _REGISTRY: Dict[str, ScenarioSpec] = {
     s.name: s for s in (
         PAPER_2022, FOUR_SITE_MESH, DEGRADED_SOURCE, FAULT_STORM,
+        HARSH_FAULTS,
         FLAKY_NETWORK, INCREMENTAL_TOP_UP, COLD_START_RELAY, MEGA_CAMPAIGN,
         PAPER_TO_ALCF, PAPER_TO_OLCF,
         SMALL_FILE_STORM, MIXED_BUNDLE_PAPER, LOSSY_ROUTE_TUNING,
@@ -529,6 +550,8 @@ def scenario_tags(spec) -> List[str]:
             tags.append("demand")
         if any(m.scenario.scrub.enabled for m in spec.members):
             tags.append("scrub")
+        if any(m.scenario.obs.enabled for m in spec.members):
+            tags.append("obs")
         return tags
     if getattr(spec, "policy", None) is not None and spec.policy.enabled:
         tags.append("policy")
@@ -536,6 +559,8 @@ def scenario_tags(spec) -> List[str]:
         tags.append("demand")
     if getattr(spec, "scrub", None) is not None and spec.scrub.enabled:
         tags.append("scrub")
+    if getattr(spec, "obs", None) is not None and spec.obs.enabled:
+        tags.append("obs")
     if getattr(spec, "top_ups", ()):
         tags.append("top-ups")
     return tags

@@ -22,6 +22,15 @@ Federation scenarios (``--scenario federation-*``) run N campaigns over one
 shared simulated world; every flag above — ``--engine``, ``--datasets``,
 ``--scale``, ``--checkpoint-dir``, ``--kill-after``, ``--resume`` — works
 unchanged (checkpoints then carry one table copy per member campaign).
+
+Observability: ``--obs RUN.ndjson`` streams the flight recorder (lifecycle
+trace + metrics samples) to a file, force-enabling trace+metrics when the
+scenario does not declare its own ``ObsSpec``; ``--obs-cadence DAYS``
+overrides the metrics sample interval; ``python -m repro.obs.report
+RUN.ndjson`` renders the post-mortem.  ``--profile`` adds per-phase
+wall-time buckets to the report.  Observation never changes the
+trajectory — the report's ``trajectory`` block (digest included) is
+bit-identical with or without these flags.
 """
 from __future__ import annotations
 
@@ -110,6 +119,33 @@ def _emit(doc: dict, json_path: Optional[str]) -> None:
             json.dump(doc, f, indent=2)
 
 
+def _apply_obs(spec, args):
+    """The spec the obs flags ask for: force ``FULL_OBS`` onto a scenario
+    (or every federation member) that declared none, and apply a cadence
+    override onto whatever is enabled."""
+    import dataclasses as _dc
+
+    from repro.obs.spec import FULL_OBS
+    if hasattr(spec, "members"):                # FederationSpec
+        base = spec.members[0].scenario.obs
+        declared = any(m.scenario.obs.enabled for m in spec.members)
+    else:
+        base = spec.obs
+        declared = spec.obs.enabled
+    if args.obs and not declared:
+        base = FULL_OBS
+    if args.obs_cadence is not None:
+        base = _dc.replace(base, sample_interval_days=args.obs_cadence)
+    return spec.with_obs(base)
+
+
+def _obs_runtimes(world):
+    """Every observed campaign runtime of a (possibly federation) world."""
+    runtimes = (world.runtimes if hasattr(world, "runtimes")
+                else [world.runtime])
+    return [rt for rt in runtimes if rt is not None and rt.obs is not None]
+
+
 def _run_crash_family(spec: CrashResumeSpec, args) -> int:
     if args.engine and args.engine != spec.engine:
         spec = dataclasses.replace(spec, engine=args.engine)
@@ -158,6 +194,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="checkpoint and exit (code 3) once N iterations have "
                          "run — deterministic crash injection")
     ap.add_argument("--json", default=None, help="also write the report here")
+    ap.add_argument("--obs", default=None, metavar="RUN.ndjson",
+                    help="stream the flight recorder (trace + metrics) to "
+                         "this NDJSON file; enables trace+metrics when the "
+                         "scenario does not declare observability")
+    ap.add_argument("--obs-cadence", type=float, default=None, metavar="DAYS",
+                    help="metrics sample interval in sim days (with --obs, "
+                         "or overriding a declared ObsSpec)")
+    ap.add_argument("--profile", action="store_true",
+                    help="instrument the hot-path seams and report per-phase "
+                         "wall-time buckets")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -173,6 +219,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         ap.error("--scenario or --resume is required (or use --list)")
     if args.scenario and args.resume:
         ap.error("--scenario and --resume are mutually exclusive")
+    if args.resume and (args.obs or args.obs_cadence is not None):
+        ap.error("--obs/--obs-cadence cannot be combined with --resume "
+                 "(a resumed world is rebuilt from the scenario "
+                 "declaration; declare an ObsSpec in the registry spec "
+                 "instead)")
 
     if not args.resume:
         try:
@@ -185,6 +236,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         if args.policy == "static" and hasattr(spec, "with_policy"):
             from repro.control.policy import STATIC_POLICY
             spec = spec.with_policy(STATIC_POLICY)
+        if (args.obs or args.obs_cadence is not None) \
+                and hasattr(spec, "with_obs"):
+            spec = _apply_obs(spec, args)
 
     # install signal routing BEFORE the (potentially slow) world build, so a
     # SIGTERM at any point after startup exits through the checkpoint path
@@ -215,6 +269,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.verbose:
         print(f"# {spec.name}: {spec.description}", file=sys.stderr)
 
+    sink = None
+    if args.obs:
+        from repro.obs.sink import ObsSink
+        sink = ObsSink(args.obs)
+        for rt in _obs_runtimes(world):
+            rt.obs.attach_sink(sink)
+    prof = None
+    if args.profile:
+        from repro.obs.profile import PhaseProfiler
+        prof = PhaseProfiler().instrument_standard()
+
     stats = EngineStats()
     t0 = time.time()
     try:
@@ -228,6 +293,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                               f"--resume {killed.checkpoint_dir}"},
               args.json)
         return EXIT_KILLED
+    finally:
+        if prof is not None:
+            prof.restore()
+        if sink is not None:
+            sink.close()
     if isinstance(rep, FederationReport):
         out = federation_report_to_dict(rep, stats, time.time() - t0)
         out["trajectory"] = federation_trajectory_summary(rep, stats, world)
@@ -239,6 +309,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                  if rt.scrub is not None}
         if scrub:
             out["scrub"] = scrub
+        obs = {rt.label: rt.obs.summary() for rt in world.runtimes
+               if rt.obs is not None}
+        if obs:
+            out["obs"] = obs
     else:
         out = report_to_dict(rep, stats, time.time() - t0)
         out["trajectory"] = trajectory_summary(rep, stats, world.table)
@@ -246,8 +320,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             out["demand"] = world.demand.summary()
         if world.scrub is not None:
             out["scrub"] = world.scrub.summary()
+        if world.obs is not None:
+            out["obs"] = world.obs.summary()
     out["scenario"] = spec.name
     out["engine"] = engine
+    if prof is not None:
+        out["profile"] = prof.report(time.time() - t0)
     if resumed_from is not None:
         out["resumed_from"] = resumed_from
     if checkpointer is not None:

@@ -53,6 +53,7 @@ from repro.core.scrub import NO_SCRUB, ScrubEngine, ScrubSpec
 from repro.core.transport import SimClock, SimulatedTransport
 from repro.demand.engine import DemandEngine
 from repro.demand.spec import NO_DEMAND, DemandSpec
+from repro.obs.spec import NO_OBS, ObsSpec
 
 HOUR = 3600.0
 
@@ -155,6 +156,10 @@ class CampaignRuntime:
     # the campaign's scrub engine (silent corruption + re-verification +
     # repair); None for the default corruption-free campaign
     scrub: Optional[ScrubEngine] = None
+    # the campaign's flight recorder (trace + metrics); None for the default
+    # unobserved campaign.  Never snapshotted: a resumed campaign rebuilds
+    # observability fresh, and the trajectory is identical either way.
+    obs: Optional[object] = None
 
     @property
     def start_s(self) -> float:
@@ -215,6 +220,10 @@ class ScenarioWorld:
     def scrub(self) -> Optional[ScrubEngine]:
         return self.runtime.scrub if self.runtime is not None else None
 
+    @property
+    def obs(self):
+        return self.runtime.obs if self.runtime is not None else None
+
 
 @dataclass(frozen=True)
 class ScenarioSpec:
@@ -248,6 +257,14 @@ class ScenarioSpec:
     # corruption) compiles to NO scrub engine and replays the corruption-free
     # trajectory bit-identically.
     scrub: ScrubSpec = NO_SCRUB
+    # flight recorder (lifecycle trace + metrics time-series).  The default
+    # (``NO_OBS``) compiles to NO engine and zero hooks; an enabled spec
+    # observes without perturbing — trajectories and snapshots stay
+    # bit-identical with obs on or off (CI-gated).
+    obs: ObsSpec = NO_OBS
+    # retention horizon (days) for the transport's per-(day, route) flow
+    # telemetry; None keeps every bucket for the whole campaign
+    flow_horizon_days: Optional[float] = None
 
     # ------------------------------------------------------------- compilers
     def to_campaign_config(self, scale: float = 1.0, seed: int = 0,
@@ -265,7 +282,8 @@ class ScenarioSpec:
             unreadable_fraction=self.catalog.unreadable_fraction,
             human_fix_days=self.human_fix_days,
             scale=scale,
-            task_setup_s=self.task_setup_s)
+            task_setup_s=self.task_setup_s,
+            flow_horizon_days=self.flow_horizon_days)
 
     def build_graph(self) -> RouteGraph:
         sites = [Site(s.name, read_bw=s.read_gbps * GB,
@@ -376,6 +394,15 @@ class ScenarioSpec:
         return ScrubEngine(self.scrub, catalog, table, injector,
                            self.source, self.replicas, label=label)
 
+    def _build_obs(self, label: str):
+        """The flight recorder, or None when the spec does not opt in —
+        ``NO_OBS`` must compile to zero hooks (engine imported lazily so an
+        unobserved build never touches the obs package)."""
+        if not self.obs.enabled:
+            return None
+        from repro.obs.engine import Observability
+        return Observability(self.obs, label=label)
+
     def build(self, scale: float = 1.0, seed: int = 0,
               n_datasets: Optional[int] = None, table=None) -> ScenarioWorld:
         """Compile the spec onto the campaign wiring, ready to run under
@@ -384,6 +411,7 @@ class ScenarioSpec:
         self.policy.validate()
         self.demand.validate()
         self.scrub.validate()
+        self.obs.validate()
         cfg = self.to_campaign_config(scale=scale, seed=seed,
                                       n_datasets=n_datasets)
         injector = FaultInjector(seed=seed,
@@ -412,6 +440,10 @@ class ScenarioSpec:
                                   demand=demand, scrub=scrub)
         self._attach_top_ups(runtime, scale)
         shared = SharedWorld(graph, clock, pause, transport)
+        obs = self._build_obs(label=self.name)
+        if obs is not None:
+            runtime.obs = obs
+            obs.attach(runtime, shared)
         return ScenarioWorld(self, cfg, graph, catalog, clock, pause,
                              transport, table, sched, notifier,
                              incremental=runtime.incremental,
@@ -461,6 +493,16 @@ class ScenarioSpec:
         if changes:
             base = dataclasses.replace(base, **changes)
         return dataclasses.replace(self, scrub=base)
+
+    def with_obs(self, obs: Optional[ObsSpec] = None,
+                 **changes) -> "ScenarioSpec":
+        """A copy with a different observability spec: pass a whole
+        ``ObsSpec`` or field overrides on the current one.
+        ``with_obs(NO_OBS)`` is the unobserved baseline."""
+        base = obs if obs is not None else self.obs
+        if changes:
+            base = dataclasses.replace(base, **changes)
+        return dataclasses.replace(self, obs=base)
 
 
 # ================================================================ federation
@@ -552,6 +594,15 @@ class FederationSpec:
         """A copy running every member under ``policy``."""
         return dataclasses.replace(self, policy=policy)
 
+    def with_obs(self, obs: ObsSpec) -> "FederationSpec":
+        """A copy with every member campaign observed under ``obs`` (each
+        member gets its own flight recorder; one shared sink tells their
+        streams apart by the per-record ``campaign`` label)."""
+        members = tuple(
+            dataclasses.replace(m, scenario=m.scenario.with_obs(obs))
+            for m in self.members)
+        return dataclasses.replace(self, members=members)
+
     def member_labels(self) -> List[str]:
         labels = []
         for i, m in enumerate(self.members):
@@ -568,6 +619,7 @@ class FederationSpec:
         route_owner: Dict[Tuple[str, str], Tuple[RouteSpec, str]] = {}
         faults = self.members[0].scenario.faults
         setup = self.members[0].scenario.task_setup_s
+        horizon = self.members[0].scenario.flow_horizon_days
         for m in self.members:
             spec = m.scenario
             if spec.faults != faults:
@@ -580,6 +632,11 @@ class FederationSpec:
                     f"federation {self.name!r}: member {spec.name!r} declares "
                     f"task_setup_s={spec.task_setup_s}, the shared transport "
                     f"has one task dispatch cost ({setup})")
+            if spec.flow_horizon_days != horizon:
+                raise ValueError(
+                    f"federation {self.name!r}: member {spec.name!r} declares "
+                    f"flow_horizon_days={spec.flow_horizon_days}, the shared "
+                    f"transport has one telemetry horizon ({horizon})")
             for s in spec.sites:
                 seen = site_owner.get(s.name)
                 if seen is None:
@@ -663,7 +720,8 @@ class FederationSpec:
         fed_notifier = FederationNotifier()
         transport = SimulatedTransport(graph, SimClock(0.0), pause, injector,
                                        fed_notifier, base.build_retry(),
-                                       task_setup_s=base.task_setup_s)
+                                       task_setup_s=base.task_setup_s,
+                                       flow_horizon_days=base.flow_horizon_days)
         shared = SharedWorld(graph, transport.clock, pause, transport)
         runtimes: List[CampaignRuntime] = []
         merged: Dict[str, Dataset] = {}
@@ -675,6 +733,7 @@ class FederationSpec:
             spec.policy.validate()
             spec.demand.validate()
             spec.scrub.validate()
+            spec.obs.validate()
             cfg = spec.to_campaign_config(scale=scale, seed=seed,
                                           n_datasets=n_datasets)
             notifier = Notifier()
@@ -720,6 +779,10 @@ class FederationSpec:
                          if composer is not None else catalog)
             fed_notifier.attach(route_map, notifier)
             spec._attach_top_ups(rt, scale)
+            obs = spec._build_obs(label=labels[i])
+            if obs is not None:
+                rt.obs = obs
+                obs.attach(rt, shared)
             runtimes.append(rt)
         return FederationWorld(self, shared, runtimes, scale=scale,
                                seed=seed, n_datasets=n_datasets)

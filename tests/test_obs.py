@@ -1,0 +1,323 @@
+"""Flight-recorder tests: the obs-on/obs-off bit-identity contract (single
+campaign, federation, scrub), cross-process NDJSON byte identity, snapshot
+byte identity, trace ring budgeting, metrics registry semantics, transport
+flow-telemetry horizon pruning, dashboard JSON cleanliness, the phase
+profiler, and the post-mortem report CLI."""
+import dataclasses
+import json
+import math
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.snapshot import (federation_trajectory_summary,
+                                 trajectory_summary)
+from repro.obs import FULL_OBS, NO_OBS, ObsSpec
+from repro.obs.metrics import Counter, Histogram, MetricsRegistry
+from repro.obs.sink import ObsSink, json_line, sanitize
+from repro.obs.trace import TraceRecorder, to_chrome
+from repro.scenarios.events import EngineStats, run_world
+from repro.scenarios.registry import get_scenario, scenario_tags
+
+TINY = dict(n_datasets=12, scale=0.01)
+
+
+def _cli_env():
+    return dict(os.environ, PYTHONPATH="src" + os.pathsep +
+                os.environ.get("PYTHONPATH", ""))
+
+
+def _run_traj(spec, **kw):
+    world = spec.build(**kw)
+    stats = EngineStats()
+    rep = run_world(world, engine="events", stats=stats)
+    return world, trajectory_summary(rep, stats, world.table)
+
+
+# ================================================== bit-identity contract
+@pytest.mark.parametrize("name", ["paper-2022", "scrub-and-repair",
+                                  "esgf-serving"])
+def test_obs_on_off_trajectory_identical(name):
+    spec = get_scenario(name)
+    _, off = _run_traj(spec.with_obs(NO_OBS), **TINY)
+    world, on = _run_traj(spec.with_obs(FULL_OBS), **TINY)
+    assert on == off
+    # and the recorder actually saw the campaign it did not perturb
+    assert world.obs is not None
+    assert world.obs.trace.summary()["events"] > 0
+    assert len(world.obs.samples) >= 2
+
+
+def test_obs_on_off_federation_identical():
+    fed = get_scenario("federation-paper-twice")
+    kw = dict(n_datasets=8, scale=0.004)
+
+    def run(spec):
+        world = spec.build(**kw)
+        stats = EngineStats()
+        rep = run_world(world, engine="events", stats=stats)
+        return world, federation_trajectory_summary(rep, stats, world)
+
+    _, off = run(fed)
+    world, on = run(fed.with_obs(FULL_OBS))
+    assert on == off
+    # every member carries its own recorder, labelled by campaign
+    labels = [rt.obs.label for rt in world.runtimes]
+    assert len(labels) == 2 and len(set(labels)) == 2
+    for rt in world.runtimes:
+        assert rt.obs.trace.summary()["events"] > 0
+
+
+def test_strict_cadence_keeps_physical_trajectory():
+    spec = get_scenario("paper-2022")
+    _, off = _run_traj(spec, **TINY)
+    world, on = _run_traj(
+        spec.with_obs(ObsSpec(metrics=True, strict_cadence=True,
+                              sample_interval_days=1.0)), **TINY)
+    # extra sampling iterations are allowed; the physics must not move
+    for key in ("faults_total", "quarantined", "bytes_at",
+                "succeeded_digest"):
+        assert on[key] == off[key]
+    assert on["iterations"] >= off["iterations"]
+    # strict cadence means samples land on (near-)exact day boundaries
+    days = [s["t_day"] for s in world.obs.samples[1:-1]]
+    assert days, "no interior samples taken"
+    for d in days:
+        assert abs(d - round(d)) < 1e-3
+
+
+# ================================================ cross-process determinism
+def test_ndjson_stream_byte_identical_across_processes(tmp_path):
+    env = _cli_env()
+    base = [sys.executable, "-m", "repro.scenarios.run", "--scenario",
+            "paper-2022", "--datasets", "12", "--scale", "0.01"]
+    paths = [str(tmp_path / f"run{i}.ndjson") for i in (1, 2)]
+    for p in paths:
+        r = subprocess.run(base + ["--obs", p], capture_output=True,
+                           text=True, timeout=300, env=env, cwd=".")
+        assert r.returncode == 0, r.stderr[-2000:]
+    b1, b2 = (open(p, "rb").read() for p in paths)
+    assert b1 == b2
+    assert b1.count(b"\n") > 10
+
+
+def _strip_uids(obj):
+    """In-flight transfer uids are ``uuid4()`` — random per process even
+    without obs — so snapshot comparison normalizes them away."""
+    if isinstance(obj, dict):
+        return {k: ("UID" if k == "uid" else _strip_uids(v))
+                for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_strip_uids(v) for v in obj]
+    return obj
+
+
+def test_snapshot_identical_obs_on_off(tmp_path):
+    """The recorder is excluded from snapshots: a mid-run checkpoint taken
+    under observation equals the checkpoint of an unobserved run (modulo
+    the process-random transfer uids, which differ between any two runs)."""
+    env = _cli_env()
+    base = [sys.executable, "-m", "repro.scenarios.run", "--scenario",
+            "paper-2022", "--datasets", "12", "--scale", "0.01",
+            "--kill-after", "40"]
+    snaps = {}
+    for arm, extra in (("off", []),
+                       ("on", ["--obs", str(tmp_path / "run.ndjson")])):
+        ck = str(tmp_path / f"ck-{arm}")
+        r = subprocess.run(base + ["--checkpoint-dir", ck] + extra,
+                           capture_output=True, text=True, timeout=300,
+                           env=env, cwd=".")
+        assert r.returncode == 3, (r.returncode, r.stderr[-2000:])
+        latest = open(os.path.join(ck, "LATEST")).read().strip()
+        assert latest == "snapshot-00000040.json"   # same kill iteration
+        with open(os.path.join(ck, latest)) as f:
+            snaps[arm] = _strip_uids(json.load(f))
+    assert snaps["on"] == snaps["off"]
+
+
+def test_obs_flag_refused_on_resume(tmp_path):
+    env = _cli_env()
+    r = subprocess.run([sys.executable, "-m", "repro.scenarios.run",
+                        "--resume", str(tmp_path / "nope"), "--obs",
+                        str(tmp_path / "x.ndjson")],
+                       capture_output=True, text=True, timeout=60, env=env,
+                       cwd=".")
+    assert r.returncode != 0
+    assert "--obs" in (r.stderr + r.stdout)
+
+
+# ====================================================== trace ring + sink
+def test_trace_ring_budget_evicts_oldest_but_sink_sees_all(tmp_path):
+    p = str(tmp_path / "t.ndjson")
+    sink = ObsSink(p)
+    tr = TraceRecorder(budget_bytes=600, campaign="c", sink=sink)
+    for i in range(50):
+        tr.record(float(i), "dispatched", dataset=f"ds{i:04d}", dest="X")
+    sink.close()
+    s = tr.summary()
+    assert s["events"] == 50
+    assert s["dropped"] > 0 and s["retained"] < 50
+    assert s["ring_bytes"] <= 600
+    # ring keeps the newest records
+    kept = tr.records()
+    assert kept[-1]["dataset"] == "ds0049"
+    # the streaming sink is unbounded: every event landed
+    lines = open(p).read().splitlines()
+    assert sum(1 for ln in lines if json.loads(ln)["k"] == "trace") == 50
+
+
+def test_json_line_deterministic_and_nan_clean():
+    obj = {"b": float("nan"), "a": float("inf"), "c": [1.0, -float("inf")],
+           "d": {"y": 2, "x": 1}}
+    line = json_line(obj)
+    assert line == json_line(dict(reversed(list(obj.items()))))
+    assert "NaN" not in line and "Infinity" not in line
+    assert sanitize(float("nan")) is None
+
+
+def test_to_chrome_spans_and_metadata():
+    tr = TraceRecorder(budget_bytes=1 << 20, campaign="c")
+    tr.record(0.0, "queued", dataset="d", dest="A")
+    tr.record(10.0, "dispatched", dataset="d", dest="A")
+    tr.record(25.0, "succeeded", dataset="d", dest="A")
+    tr.record(30.0, "scrub-pass", scanned=4, detected=0)
+    doc = to_chrome(tr.records())
+    phases = [e["ph"] for e in doc["traceEvents"]]
+    assert "X" in phases and "i" in phases and "M" in phases
+    span = next(e for e in doc["traceEvents"] if e["ph"] == "X")
+    # 1 trace microsecond == 1 sim second
+    assert span["ts"] == pytest.approx(10.0)
+    assert span["dur"] == pytest.approx(15.0)
+    assert span["name"] == "succeeded"
+
+
+# ========================================================= metrics registry
+def test_metrics_primitives():
+    c = Counter()
+    c.inc(); c.inc(3)
+    assert c.value == 4
+    h = Histogram()
+    for v in (30.0, 90.0, 5000.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 3 and s["sum"] == pytest.approx(5120.0)
+    assert s["p50"] >= 30.0
+    reg = MetricsRegistry()
+    reg.counter("a.b").inc()
+    assert reg.counter("a.b") is reg.counter("a.b")
+    snap = reg.snapshot()
+    assert snap["counters"]["a.b"] == 1
+
+
+def test_obs_spec_validation():
+    with pytest.raises(ValueError):
+        ObsSpec(metrics=True, sample_interval_days=0.0).validate()
+    with pytest.raises(ValueError):
+        ObsSpec(trace=True, trace_budget_bytes=0).validate()
+    NO_OBS.validate()   # disabled spec never validates its knobs
+
+
+# ================================================= flow-telemetry horizon
+def test_flow_horizon_bounds_flow_totals():
+    spec = get_scenario("paper-2022")
+    bounded = dataclasses.replace(spec, flow_horizon_days=3.0)
+    w1, t1 = _run_traj(spec, **TINY)
+    w2, t2 = _run_traj(bounded, **TINY)
+    # pruning is pure telemetry hygiene: the trajectory cannot move
+    assert t1 == t2
+    tr1 = w1.runtime.sched.transport
+    tr2 = w2.runtime.sched.transport
+    days1 = {k[0] for k in tr1.flow_totals}
+    days2 = {k[0] for k in tr2.flow_totals}
+    assert max(days1) - min(days1) > 3      # unbounded run spans the campaign
+    assert max(days2) - min(days2) <= 3     # bounded run kept the horizon
+    assert len(tr2.flow_totals) < len(tr1.flow_totals)
+
+
+def test_federation_members_must_agree_on_flow_horizon():
+    fed = get_scenario("federation-paper-twice")
+    members = list(fed.members)
+    members[0] = dataclasses.replace(
+        members[0], scenario=dataclasses.replace(
+            members[0].scenario, flow_horizon_days=5.0))
+    bad = dataclasses.replace(fed, members=tuple(members))
+    with pytest.raises(ValueError, match="flow_horizon_days"):
+        bad.build(n_datasets=8, scale=0.004)
+
+
+# ======================================================== dashboard rows
+def test_dashboard_row_dict_json_clean():
+    from repro.core.dashboard import row_dict
+    world, _ = _run_traj(get_scenario("paper-2022").with_obs(FULL_OBS),
+                         **TINY)
+    rows = [row_dict(r) for r in world.table.all()]
+    assert rows
+    text = json.dumps(rows, allow_nan=False)     # raises on NaN/inf
+    assert "NaN" not in text
+    # obs rows render without touching world state
+    from repro.core.dashboard import obs_rows, render_obs_text
+    kinds = {r["kind"] for r in obs_rows(world.obs)}
+    assert kinds == {"trace", "metrics"}
+    assert "trace" in render_obs_text(world.obs, 0.0)
+
+
+# ========================================================= phase profiler
+def test_phase_profiler_wrap_and_restore():
+    from repro.core.scheduler import ReplicationScheduler
+    from repro.obs.profile import PhaseProfiler
+    orig_step = ReplicationScheduler.step
+    with PhaseProfiler() as prof:
+        prof.instrument_standard()
+        assert ReplicationScheduler.step is not orig_step
+        world = get_scenario("paper-2022").build(**TINY)
+        run_world(world, engine="events")
+    assert ReplicationScheduler.step is orig_step
+    rep = prof.report(wall_s=1.0)
+    assert rep["wall_s"] == 1.0
+    assert rep["phases_s"]["sched"] > 0
+    assert rep["phases_s"]["driver"] >= 0
+    assert sum(rep["phases_pct"].values()) == pytest.approx(100.0, abs=0.5)
+
+
+# ===================================================== post-mortem report
+def test_report_cli_and_perfetto_export(tmp_path):
+    env = _cli_env()
+    nd = str(tmp_path / "run.ndjson")
+    r = subprocess.run([sys.executable, "-m", "repro.scenarios.run",
+                        "--scenario", "paper-2022", "--datasets", "12",
+                        "--scale", "0.01", "--obs", nd],
+                       capture_output=True, text=True, timeout=300, env=env,
+                       cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    from repro.obs.report import load_stream, main, render
+    stream = load_stream(nd)
+    assert stream["trace"] and stream["metrics"] and stream["meta"]
+    text = render(stream, top=5)
+    for section in ("post-mortem", "days vs bytes", "fault / outage",
+                    "slowest routes", "most-retried"):
+        assert section in text.lower(), f"missing section {section!r}"
+    pf = str(tmp_path / "trace.json")
+    assert main([nd, "--perfetto", pf, "--json"]) == 0
+    doc = json.load(open(pf))
+    assert doc["traceEvents"]
+    assert all(set(e) >= {"ph", "ts", "pid", "tid"}
+               for e in doc["traceEvents"] if e["ph"] != "M")
+
+
+# ======================================================= registry + lanes
+def test_harsh_faults_scenario_registered_with_obs():
+    spec = get_scenario("harsh-faults")
+    assert spec.obs.enabled and spec.obs.trace and spec.obs.metrics
+    assert "obs" in scenario_tags(spec)
+    assert any(not o.planned for o in spec.outages)
+
+
+def test_lane_engine_refuses_observed_specs():
+    from repro.ensemble.lanes import lane_capable
+    spec = get_scenario("paper-2022")
+    ok, _ = lane_capable(spec)
+    assert ok
+    ok, reason = lane_capable(spec.with_obs(FULL_OBS))
+    assert not ok and "recorder" in reason
